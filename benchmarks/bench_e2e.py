@@ -1,0 +1,101 @@
+"""Figs. 18/19/22 analog: end-to-end collaborative session — motion-to-photon
+model, energy model, and the CMP/TA/SR ablation stack."""
+
+import dataclasses as dc
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import city_scene, emit, rigs_along_walk
+from repro.core import energy, lod_search as ls
+from repro.core.manager import POSE_UPLINK_BYTES
+from repro.core.pipeline import (CollaborativeSession, SessionConfig,
+                                 render_stereo, render_stereo_reference)
+from repro.core.video_model import (LINK_RATE_BPS, StreamConfig,
+                                    nebula_sync_latency_s,
+                                    video_bytes_per_frame,
+                                    video_frame_latency_s)
+
+
+def run():
+    _cfg, leaves, tree = city_scene("medium")
+    rigs = rigs_along_walk(48, extent=(200.0, 200.0))
+
+    # ---- ablation (Fig. 22): BASE / +CMP / +CMP+TA / +ALL -------------------
+    variants = {
+        "base": SessionConfig(tau=48.0, w=4, use_compression=False),
+        "cmp": SessionConfig(tau=48.0, w=4, use_compression=True),
+    }
+    byte_rows = {}
+    for name, cfg in variants.items():
+        sess = CollaborativeSession(tree, cfg, rigs[0])
+        tot, n = 0.0, 0
+        for rig in rigs:
+            stats, _ = sess.step(rig, render=False)
+            tot += stats.sync_bytes
+            n += 1
+        byte_rows[name] = tot / n
+        emit(f"e2e/bytes_per_frame_{name}", 0.0, f"{tot/n:.0f}B")
+    emit("e2e/cmp_reduction", 0.0,
+         f"{byte_rows['base']/max(byte_rows['cmp'],1):.2f}x fewer bytes")
+
+    # TA ablation: nodes touched with/without temporal reuse
+    poses = [np.asarray(r.left.pos) for r in rigs]
+    f, tau = jnp.float32(rigs[0].left.focal), jnp.float32(48.0)
+    cut, state = ls.full_search(tree, poses[0], f, tau)
+    full_nodes = int(cut.nodes_touched)
+    touched = []
+    for p in poses[1:]:
+        cut, state = ls.temporal_search(tree, state, p, f, tau)
+        touched.append(int(cut.nodes_touched))
+    emit("e2e/ta_node_reduction", 0.0,
+         f"{full_nodes/max(np.mean(touched),1):.1f}x fewer nodes/frame")
+
+    # SR ablation: stereo sharing vs two-pass wall time
+    cut2, _ = ls.full_search(tree, poses[0], f, tau)
+    gids, _c, _ = ls.cut_gids(cut2, tree, budget=16384)
+    q = tree.gaussians.slice_rows(jnp.clip(gids, 0))
+    q = dc.replace(q, opacity=jnp.where(gids >= 0, q.opacity, 0.0))
+    from benchmarks.common import timeit
+    from benchmarks.bench_stereo import _two_pass_tiled
+    t_sr = timeit(lambda: render_stereo(q, rigs[0], tile=16, list_len=256,
+                                        max_pairs=1 << 17)[:2], repeats=2)
+    t_2p = timeit(lambda: _two_pass_tiled(q, rigs[0]), repeats=2)
+    emit("e2e/sr_speedup", 0.0,
+         f"{t_2p/t_sr:.2f}x vs independent tiled eyes (CPU; paper: 1.4-1.9x)")
+
+    # ---- motion-to-photon model (Fig. 18, VR resolution) --------------------
+    video_lat = video_frame_latency_s(StreamConfig())
+    sess = CollaborativeSession(tree, SessionConfig(tau=48.0, w=4), rigs[0])
+    sync_bytes = []
+    for rig in rigs:
+        st, _ = sess.step(rig, render=False)
+        if st.synced:
+            sync_bytes.append(st.sync_bytes)
+    steady = float(np.mean(sync_bytes[len(sync_bytes) // 3:]))
+    # client-side only on the critical path (Fig. 10); cloud+net amortized
+    nebula_lat = nebula_sync_latency_s(steady) / 4 + POSE_UPLINK_BYTES * 8 / LINK_RATE_BPS
+    emit("e2e/mtp_video_streaming", video_lat * 1e6, "per frame (encode+tx+decode)")
+    emit("e2e/mtp_nebula_net", nebula_lat * 1e6,
+         f"NETWORK path only (paper's 2.7x also includes client render); "
+         f"net-path speedup={video_lat/nebula_lat:.0f}x")
+
+    # ---- energy model (Fig. 19) ---------------------------------------------
+    vb = video_bytes_per_frame(StreamConfig())
+    e_video = energy.client_frame_energy(dram_bytes=vb * 2, sram_bytes=0,
+                                         macs=5e6, comm_bytes=vb)
+    n_cut = int(cut2.count())
+    from repro.core.gaussians import bytes_per_gaussian
+    g_bytes = n_cut * bytes_per_gaussian(1)
+    e_neb = energy.client_frame_energy(dram_bytes=g_bytes * 3,
+                                       sram_bytes=g_bytes * 8,
+                                       macs=n_cut * 2000.0,
+                                       comm_bytes=steady / 4 + POSE_UPLINK_BYTES)
+    emit("e2e/energy_video_mj", e_video.total_j * 1e3, "per frame (modeled)")
+    emit("e2e/energy_nebula_mj", e_neb.total_j * 1e3,
+         f"comm={e_neb.comm_j*1e3:.2f}mJ compute={e_neb.compute_j*1e3:.2f}mJ")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Pallas kernel interpret-mode sweeps vs oracles (correctness timing is NOT
+TPU perf — the structural numbers for the roofline come from the dry-run)."""
+
+import dataclasses as dc
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.binning import BinConfig, bin_left
+from repro.core.camera import StereoRig, make_camera
+from repro.core.gaussians import random_gaussians
+from repro.core.projection import depth_ranks, project
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    g = random_gaussians(rng, 2000, sh_degree=1, extent=6.0)
+    cam = make_camera([0, -18, 2], [0, 0, 0], focal_px=220.0, width=160,
+                      height=96, near=0.25)
+    rig = StereoRig(left=cam, baseline=0.06)
+    wide = dc.replace(cam, width=256)
+    splats = project(g, rig, wide)
+    ranks = depth_ranks(splats)
+    cfg = BinConfig(tile=16, max_pairs=1 << 16, list_len=192)
+    lists = bin_left(splats, wide.width, cam.height, cfg, ranks)
+
+    t_p = timeit(lambda: ops.rasterize(lists, splats, width=cam.width,
+                                       height=cam.height, tile=16, eye="left",
+                                       use_pallas=True), repeats=2)
+    t_r = timeit(lambda: ops.rasterize(lists, splats, width=cam.width,
+                                       height=cam.height, tile=16, eye="left",
+                                       use_pallas=False), repeats=2)
+    emit("kernel/rasterize_pallas_interp", t_p, "")
+    emit("kernel/rasterize_oracle", t_r, "")
+
+    x = jnp.asarray(rng.normal(size=(4096, 24)).astype(np.float32))
+    cb = jnp.asarray(rng.normal(size=(1024, 24)).astype(np.float32))
+    emit("kernel/vq_pallas_interp",
+         timeit(lambda: ops.vq_assign(x, cb, use_pallas=True), repeats=2), "")
+    emit("kernel/vq_oracle",
+         timeit(lambda: ops.vq_assign(x, cb, use_pallas=False), repeats=2), "")
+
+    q = jnp.asarray(rng.normal(size=(2, 8, 256, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 2, 256, 64)).astype(np.float32))
+    emit("kernel/flash_attn_pallas_interp",
+         timeit(lambda: ops.flash_attention(q, k, k, use_pallas=True), repeats=2), "")
+    emit("kernel/flash_attn_oracle",
+         timeit(lambda: ops.flash_attention(q, k, k, use_pallas=False), repeats=2), "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Framework-side: tiny-LM train throughput + serving throughput on CPU
+(the TPU numbers are the §Roofline dry-run terms)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs import ARCHS
+from repro.models.config import reduced
+from repro.models.model_zoo import get_model
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def run():
+    cfg = reduced(ARCHS["qwen2.5-3b"], n_layers=4, d_model=256, d_ff=512,
+                  vocab=2048, n_heads=8, n_kv_heads=4, head_dim=32)
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ocfg = opt.OptimizerConfig()
+    ostate = opt.init(params)
+    step = jax.jit(make_train_step(model, ocfg))
+    rng = np.random.default_rng(0)
+    b, s = 8, 256
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+             "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    t = timeit(lambda: step(params, ostate, None, batch)[3]["loss"], repeats=3)
+    toks = b * s
+    emit("lm/train_step_us", t, f"{toks/t*1e6:.0f} tok/s (CPU, tiny cfg)")
+
+    cache = model.make_cache(b, 128)
+    dstep = jax.jit(lambda p, c, bb: model.decode_step(p, c, bb))
+    tok = jnp.zeros((b,), jnp.int32)
+    t = timeit(lambda: dstep(params, cache, {"token": tok})[0], repeats=3)
+    emit("lm/decode_step_us", t, f"{b/t*1e6:.0f} tok/s decode")
+
+
+if __name__ == "__main__":
+    run()

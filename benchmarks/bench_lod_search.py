@@ -1,0 +1,66 @@
+"""Fig. 20 analog: LoD search — full traversal vs fully-streaming vs
+temporal-aware. Reports wall time AND nodes-touched (the architecture-neutral
+work metric; the paper's 52.7× is a GPU wall-clock number)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import city_scene, emit, rigs_along_walk, timeit
+from repro.core import lod_search as ls
+
+FOCAL, TAU = 1400.0, 48.0
+
+
+def run():
+    _cfg, leaves, tree = city_scene("large")
+    m = tree.meta
+    rigs = rigs_along_walk(96, extent=(200.0, 200.0))
+    poses = [np.asarray(r.left.pos) for r in rigs]
+
+    # baseline: brute-force reference (numpy level iteration = OctreeGS-style
+    # full traversal; counts all real nodes)
+    t_ref = timeit(lambda: ls.reference_search_np(tree, poses[0], FOCAL, TAU),
+                   repeats=3)
+    emit("lod/full_traversal_np", t_ref, f"nodes={m.n_real}")
+
+    # fully-streaming initial frame (ours)
+    f = jnp.float32(FOCAL)
+    tau = jnp.float32(TAU)
+    t_full = timeit(lambda: ls.full_search(tree, poses[0], f, tau))
+    emit("lod/streaming_full", t_full, f"nodes={m.T + m.Ns * m.S}")
+
+    # temporal-aware across the walk (hybrid: real skipping)
+    cut, state = ls.full_search(tree, poses[0], f, tau)
+    touched, times = [], []
+    for p in poses[1:]:
+        import time
+        t0 = time.perf_counter()
+        cut, state = ls.temporal_search_hybrid(tree, state, p, FOCAL, TAU)
+        times.append(time.perf_counter() - t0)
+        touched.append(int(cut.nodes_touched))
+    emit("lod/temporal_aware", float(np.median(times) * 1e6),
+         f"nodes_touched={np.mean(touched):.0f}")
+    emit("lod/speedup_nodes", 0.0,
+         f"{(m.T + m.Ns * m.S) / max(np.mean(touched), 1):.1f}x fewer nodes")
+    emit("lod/speedup_walltime", 0.0,
+         f"{t_full / max(np.median(times) * 1e6, 1e-9):.1f}x vs streaming-full "
+         f"(CPU dispatch floor ~= sweep cost at this scale; the nodes-touched "
+         f"ratio is the transferable metric — paper's 52.7x is memory-bound GPU)")
+
+    # temporal similarity (Fig. 7 analog): consecutive-cut overlap
+    cut, state = ls.full_search(tree, poses[0], f, tau)
+    prev = np.asarray(cut.mask(tree))
+    overlaps = []
+    for p in poses[1:33]:
+        cut, state = ls.temporal_search(tree, state, p, f, tau)
+        cur = np.asarray(cut.mask(tree))
+        inter = (prev & cur).sum()
+        union = max(prev.sum(), 1)
+        overlaps.append(inter / union)
+        prev = cur
+    emit("lod/temporal_similarity", 0.0,
+         f"mean_overlap={np.mean(overlaps)*100:.2f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Figs. 23/25 analog: tile-size sensitivity + RU scaling model."""
+
+import dataclasses as dc
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import city_scene, emit, timeit, vr_rig
+from repro.core import lod_search as ls
+from repro.core.pipeline import render_stereo
+
+
+def run():
+    _cfg, leaves, tree = city_scene("medium")
+    rig = vr_rig()
+    cut, _ = ls.full_search(tree, np.asarray(rig.left.pos),
+                            jnp.float32(rig.left.focal), jnp.float32(48.0))
+    gids, _c, _ = ls.cut_gids(cut, tree, budget=16384)
+    q = tree.gaussians.slice_rows(jnp.clip(gids, 0))
+    q = dc.replace(q, opacity=jnp.where(gids >= 0, q.opacity, 0.0))
+
+    # tile-size sensitivity (Fig. 25)
+    for tile in (8, 16, 32):
+        t = timeit(lambda tl=tile: render_stereo(q, rig, tile=tl, list_len=384,
+                                                 max_pairs=1 << 17)[:2],
+                   repeats=2)
+        emit(f"tile/stereo_tile{tile}", t, "")
+
+    # RU scaling model (Fig. 23): work per tile / RUs, 1 GHz RTL-class model
+    il, ir, (splats, ll, rl, st) = render_stereo(q, rig, tile=16, list_len=384,
+                                                 max_pairs=1 << 17)
+    blends = st.left_blends + st.right_candidates
+    px_per_tile = 16 * 16
+    # scale measured blend counts to VR per-eye resolution (2064×2208)
+    scale = (2064 * 2208) / (rig.left.width * rig.left.height)
+    for rus in (64, 128, 256, 512):
+        # each RU handles one pixel-blend per cycle @1GHz (GSCore-class)
+        cycles = blends * scale * px_per_tile / rus
+        fps = 1e9 / max(cycles, 1)
+        emit(f"ru/fps_at_{rus}RU", 0.0,
+             f"{fps:.0f}fps modeled at VR res "
+             f"({'meets' if fps >= 90 else 'below'} 90fps; paper Fig. 23)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: scene/session setup + CSV emission."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core.camera import StereoRig, TrajectoryConfig, make_camera, walk_trajectory
+from repro.core.gaussians import CityConfig, generate_city
+from repro.core.lod_tree import build_lod_tree
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall time (µs); blocks on jax outputs."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+_SCENES = {}
+
+
+def city_scene(scale: str = "medium"):
+    """(leaves, tree) — cached per scale. 'paper' scales are documented in
+    EXPERIMENTS.md; CPU benches default to medium."""
+    if scale not in _SCENES:
+        cfgs = {
+            "small": CityConfig(blocks_x=2, blocks_y=2, leaf_density=0.10, seed=2),
+            "medium": CityConfig(blocks_x=4, blocks_y=4, leaf_density=0.25, seed=2),
+            "large": CityConfig(blocks_x=8, blocks_y=8, leaf_density=0.5, seed=2),
+        }
+        cfg = cfgs[scale]
+        leaves = generate_city(cfg)
+        tree = build_lod_tree(leaves, target_subtrees=64 if scale != "small" else 16,
+                              seed=0)
+        _SCENES[scale] = (cfg, leaves, tree)
+    return _SCENES[scale]
+
+
+def vr_rig(width=160, height=96, focal=260.0) -> StereoRig:
+    cam = make_camera([40, 40, 1.7], [90, 90, 1.5], focal_px=focal,
+                      width=width, height=height, near=0.25)
+    return StereoRig(left=cam, baseline=0.06)
+
+
+def rigs_along_walk(n: int, extent=(200.0, 200.0), width=160, height=96,
+                    focal=260.0, seed=0):
+    import dataclasses as dc
+    out = []
+    for cam in walk_trajectory(TrajectoryConfig(seed=seed), n, extent,
+                               focal_px=focal, width=width, height=height):
+        out.append(StereoRig(left=dc.replace(cam, near=0.25), baseline=0.06))
+    return out

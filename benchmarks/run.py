@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV rows."""
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_memory",       # Figs. 2/6
+    "benchmarks.bench_lod_search",   # Figs. 7/20
+    "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24
+    "benchmarks.bench_stereo",       # Figs. 8/21
+    "benchmarks.bench_quality",      # Figs. 16/17(quality)
+    "benchmarks.bench_e2e",          # Figs. 18/19/22
+    "benchmarks.bench_tile_size",    # Figs. 23/25
+    "benchmarks.bench_kernels",      # per-kernel sweeps
+    "benchmarks.bench_lm",           # framework LM throughput
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        print(f"# --- {mod_name} ---", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failed.append(mod_name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro — Nebula (city-scale 3DGS collaborative rendering) + multi-pod LM framework in JAX.
+
+Layout:
+  repro.core      — the paper's contribution: LoD search, Gaussian management,
+                    stereo rasterization, collaborative pipeline.
+  repro.kernels   — Pallas TPU kernels (+ pure-jnp oracles) for the hot spots.
+  repro.models    — the assigned LM-family architecture zoo.
+  repro.sharding  — logical-axis sharding rules (DP/FSDP/TP/EP/SP).
+  repro.train     — optimizer, train step, trainer (fault tolerant).
+  repro.serve     — prefill/decode serving engine.
+  repro.data      — synthetic data pipelines with prefetch.
+  repro.checkpoint— mesh-agnostic checkpointing (elastic restore).
+  repro.configs   — one config per assigned architecture (+ scene configs).
+  repro.launch    — production mesh, multi-pod dry-run, roofline, drivers.
+"""
+
+__version__ = "0.1.0"

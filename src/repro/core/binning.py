@@ -1,0 +1,156 @@
+"""Depth-ordered tile binning (shared between eyes up to the disparity shift).
+
+Produces per-tile fixed-length index lists, front-to-back. The same routine
+bins the left eye (widened image, unshifted means) and — because the
+conservative α-extent is disparity-invariant — the right eye (means shifted
+by −disparity, unwidened width). Depth ranks are shared, so every produced
+list is sorted by construction (the paper's "already sorted" invariant that
+the 4-way merge relies on)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import Splats
+
+
+@dataclasses.dataclass(frozen=True)
+class BinConfig:
+    tile: int = 16           # tile side in pixels
+    max_pairs: int = 1 << 16  # (gaussian, tile) pair budget
+    list_len: int = 256       # per-tile list capacity
+    precise_cull: bool = True  # GSCore-style shape-aware tile test (§Perf):
+    # on top of the α-ellipse AABB span, drop (splat, tile) pairs whose tile
+    # rectangle lies beyond the conservative corner circle r² = 2·λ_max·
+    # ln(opa/α_min). Strictly conservative ⇒ bit-accuracy preserved (tested).
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TileLists:
+    """lists[t, i] = splat index (−1 padded), front-to-back within each tile."""
+
+    lists: jax.Array       # (n_tiles, list_len) int32
+    counts: jax.Array      # (n_tiles,) int32
+    overflow: jax.Array    # () bool — any budget exceeded
+    tiles_x: int = dataclasses.field(metadata=dict(static=True))
+    tiles_y: int = dataclasses.field(metadata=dict(static=True))
+
+
+def corner_r2(conic: jax.Array, opacity: jax.Array) -> jax.Array:
+    """Conservative cull radius²: tile rects farther than this from the splat
+    center cannot reach α ≥ α_min anywhere (uses λ_max of the 2D covariance =
+    1/λ_min of the conic)."""
+    from repro.core.projection import ALPHA_MIN
+    a_, b_, c_ = conic[:, 0], conic[:, 1], conic[:, 2]
+    lam_min_conic = (a_ + c_) / 2 - jnp.sqrt(((a_ - c_) / 2) ** 2 + b_ ** 2)
+    lam_max = 1.0 / jnp.maximum(lam_min_conic, 1e-12)
+    return 2.0 * lam_max * jnp.log(jnp.maximum(opacity, ALPHA_MIN) / ALPHA_MIN)
+
+
+def tile_span(mean2d, ext, tile: int, tiles_x: int, tiles_y: int):
+    """Inclusive tile index ranges covered by each splat's α-AABB."""
+    x0 = jnp.floor((mean2d[:, 0] - ext[:, 0]) / tile).astype(jnp.int32)
+    x1 = jnp.floor((mean2d[:, 0] + ext[:, 0]) / tile).astype(jnp.int32)
+    y0 = jnp.floor((mean2d[:, 1] - ext[:, 1]) / tile).astype(jnp.int32)
+    y1 = jnp.floor((mean2d[:, 1] + ext[:, 1]) / tile).astype(jnp.int32)
+    x0 = jnp.clip(x0, 0, tiles_x - 1)
+    x1 = jnp.clip(x1, 0, tiles_x - 1)
+    y0 = jnp.clip(y0, 0, tiles_y - 1)
+    y1 = jnp.clip(y1, 0, tiles_y - 1)
+    return x0, x1, y0, y1
+
+
+def bin_tiles(mean2d: jax.Array, ext: jax.Array, ranks: jax.Array,
+              visible: jax.Array, width: int, height: int, cfg: BinConfig,
+              conic: jax.Array = None, opacity: jax.Array = None
+              ) -> TileLists:
+    """Bin splats into per-tile depth-ordered lists (jittable, static budgets)."""
+    tile = cfg.tile
+    tiles_x = -(-width // tile)
+    tiles_y = -(-height // tile)
+    n_tiles = tiles_x * tiles_y
+    m = mean2d.shape[0]
+
+    # visibility for THIS image (binning may be called with shifted means)
+    vis = (visible
+           & (mean2d[:, 0] + ext[:, 0] >= 0.0)
+           & (mean2d[:, 0] - ext[:, 0] <= width)
+           & (mean2d[:, 1] + ext[:, 1] >= 0.0)
+           & (mean2d[:, 1] - ext[:, 1] <= height))
+
+    x0, x1, y0, y1 = tile_span(mean2d, ext, tile, tiles_x, tiles_y)
+    span_w = jnp.where(vis, x1 - x0 + 1, 0)
+    span_h = jnp.where(vis, y1 - y0 + 1, 0)
+    counts = (span_w * span_h).astype(jnp.int32)
+
+    offsets = jnp.cumsum(counts)
+    total = offsets[-1] if m > 0 else jnp.int32(0)
+    starts = offsets - counts
+
+    # expand (gaussian, tile) pairs into a fixed budget
+    p = jnp.arange(cfg.max_pairs, dtype=jnp.int32)
+    gid = jnp.searchsorted(offsets, p, side="right").astype(jnp.int32)
+    gid_c = jnp.clip(gid, 0, m - 1)
+    local = p - starts[gid_c]
+    w_g = jnp.maximum(span_w[gid_c], 1)
+    dx = local % w_g
+    dy = local // w_g
+    tx = x0[gid_c] + dx
+    ty = y0[gid_c] + dy
+    pair_valid = (p < total) & (gid < m)
+
+    if cfg.precise_cull and conic is not None and opacity is not None:
+        r2 = corner_r2(conic, opacity)
+        # distance² from the pair's tile rect to the splat center
+        mx = mean2d[gid_c, 0]
+        my = mean2d[gid_c, 1]
+        cx0 = (tx * tile).astype(jnp.float32)
+        cy0 = (ty * tile).astype(jnp.float32)
+        dx = jnp.maximum(jnp.maximum(cx0 - mx, mx - (cx0 + tile)), 0.0)
+        dy = jnp.maximum(jnp.maximum(cy0 - my, my - (cy0 + tile)), 0.0)
+        pair_valid = pair_valid & (dx * dx + dy * dy <= r2[gid_c])
+
+    tile_id = jnp.where(pair_valid, ty * tiles_x + tx, n_tiles)  # n_tiles = trash
+
+    # sort pairs by (tile, depth-rank) via two stable passes (no wide ints)
+    rank_key = jnp.where(pair_valid, ranks[gid_c], m)
+    order1 = jnp.argsort(rank_key, stable=True)
+    order = order1[jnp.argsort(tile_id[order1], stable=True)]
+    s_tile = tile_id[order]
+    s_gid = gid_c[order]
+    s_valid = pair_valid[order]
+
+    # position of each pair within its tile
+    tile_start = jnp.searchsorted(s_tile, jnp.arange(n_tiles + 1, dtype=jnp.int32))
+    pos = jnp.arange(cfg.max_pairs, dtype=jnp.int32) - tile_start[jnp.clip(s_tile, 0, n_tiles)]
+    in_list = s_valid & (pos < cfg.list_len)
+
+    flat = jnp.where(in_list, s_tile * cfg.list_len + pos, n_tiles * cfg.list_len)
+    lists = jnp.full((n_tiles * cfg.list_len + 1,), -1, jnp.int32)
+    lists = lists.at[flat].set(jnp.where(in_list, s_gid, -1))
+    lists = lists[:-1].reshape(n_tiles, cfg.list_len)
+
+    tile_counts = (tile_start[1:] - tile_start[:-1]).astype(jnp.int32)
+    tile_counts = jnp.minimum(tile_counts, cfg.list_len)
+
+    overflow = (total > cfg.max_pairs) | ((tile_start[1:] - tile_start[:-1]) > cfg.list_len).any()
+    return TileLists(lists=lists, counts=tile_counts, overflow=overflow,
+                     tiles_x=tiles_x, tiles_y=tiles_y)
+
+
+def bin_left(s: Splats, wide_width: int, height: int, cfg: BinConfig,
+             ranks: jax.Array) -> TileLists:
+    return bin_tiles(s.mean2d, s.ext, ranks, s.visible, wide_width, height,
+                     cfg, conic=s.conic, opacity=s.opacity)
+
+
+def bin_right(s: Splats, width: int, height: int, cfg: BinConfig,
+              ranks: jax.Array) -> TileLists:
+    shifted = s.mean2d - jnp.stack([s.disparity, jnp.zeros_like(s.disparity)], -1)
+    return bin_tiles(shifted, s.ext, ranks, s.visible, width, height, cfg,
+                     conic=s.conic, opacity=s.opacity)

@@ -1,0 +1,150 @@
+"""Pinhole + rectified stereo camera model, and VR head trajectories.
+
+Conventions: world is Z-up for the city scene; camera looks along +z of its
+own frame (OpenCV style: x right, y down, z forward). `c2w` is a 3x3 rotation
+whose columns are the camera axes expressed in world coordinates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Camera:
+    """Single pinhole camera.
+
+    pos:    (3,) world position
+    rot:    (3, 3) camera-to-world rotation (columns = cam axes in world)
+    focal:  scalar focal length in pixels (fx == fy)
+    width, height: image size in pixels (static python ints)
+    near, far: clip planes (meters)
+    """
+
+    pos: jax.Array
+    rot: jax.Array
+    focal: jax.Array
+    width: int = dataclasses.field(metadata=dict(static=True))
+    height: int = dataclasses.field(metadata=dict(static=True))
+    near: float = dataclasses.field(default=0.2, metadata=dict(static=True))
+    far: float = dataclasses.field(default=1000.0, metadata=dict(static=True))
+    # principal point is EXPLICIT (static) so widening the image plane for the
+    # shared-FoV stereo preprocessing does NOT shift the projection center.
+    cx: float = dataclasses.field(default=-1.0, metadata=dict(static=True))
+    cy: float = dataclasses.field(default=-1.0, metadata=dict(static=True))
+
+    def world_to_cam(self, p: jax.Array) -> jax.Array:
+        """(N,3) world → camera frame."""
+        return (p - self.pos) @ self.rot  # rot columns are axes → p·R == R^T p
+
+    def translated(self, offset_world: jax.Array) -> "Camera":
+        return dataclasses.replace(self, pos=self.pos + offset_world)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StereoRig:
+    """Rectified stereo pair: right camera = left translated by `baseline`
+    along the camera x axis. Same rotation → depth (z) identical for both eyes,
+    disparity = baseline * focal / depth (triangulation, paper §4.4)."""
+
+    left: Camera
+    baseline: float = dataclasses.field(default=0.06, metadata=dict(static=True))
+
+    @property
+    def right(self) -> Camera:
+        offset = self.left.rot[:, 0] * self.baseline  # cam x-axis in world
+        return self.left.translated(offset)
+
+    def max_disparity_px(self, near: float | None = None) -> float:
+        """Disparity is bounded by the near plane: d = B f / z <= B f / near."""
+        near = self.left.near if near is None else near
+        return float(self.baseline) * float(self.left.focal) / near
+
+    def widened_left(self, max_disparity_px: int) -> Camera:
+        """Widened-FoV camera used for shared preprocessing/binning (paper
+        Fig. 13): covers the union of both eyes' frusta by extending the left
+        camera's image plane to the right by `max_disparity_px` columns.
+
+        A point at pixel x_R in the right image sits at x_L = x_R + d with
+        d in [0, max_disp), so the union of both image x-ranges, expressed in
+        LEFT-camera pixel coordinates, is [0, W + max_disp)."""
+        return dataclasses.replace(self.left, width=self.left.width + int(max_disparity_px))
+
+
+def look_at(pos, target, up=(0.0, 0.0, 1.0)) -> np.ndarray:
+    """Camera-to-world rotation with +z toward target, x right, y down."""
+    pos = np.asarray(pos, np.float64)
+    fwd = np.asarray(target, np.float64) - pos
+    fwd /= np.linalg.norm(fwd) + 1e-12
+    upv = np.asarray(up, np.float64)
+    right = np.cross(fwd, upv)
+    nr = np.linalg.norm(right)
+    if nr < 1e-6:  # looking straight along up
+        right = np.array([1.0, 0.0, 0.0])
+    else:
+        right /= nr
+    down = np.cross(fwd, right)
+    return np.stack([right, down, fwd], axis=1).astype(np.float32)
+
+
+def make_camera(pos, target, focal_px: float, width: int, height: int,
+                near: float = 0.2, far: float = 2000.0) -> Camera:
+    return Camera(
+        pos=jnp.asarray(pos, jnp.float32),
+        rot=jnp.asarray(look_at(pos, target)),
+        focal=jnp.asarray(focal_px, jnp.float32),
+        width=width,
+        height=height,
+        near=near,
+        far=far,
+        cx=width / 2.0,
+        cy=height / 2.0,
+    )
+
+
+# VR resolutions (per eye). Quest-3 class default, per the paper's setup.
+VR_EYE_RES = (2064, 2208)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectoryConfig:
+    """Street-level VR walk with head bob and smooth yaw — 90 FPS samples."""
+
+    fps: float = 90.0
+    speed_mps: float = 1.4          # walking speed
+    yaw_rate_dps: float = 12.0      # slow look-around
+    head_bob_hz: float = 1.8
+    head_bob_m: float = 0.015
+    eye_height: float = 1.7
+    seed: int = 0
+
+
+def walk_trajectory(cfg: TrajectoryConfig, n_frames: int, extent_xy: Tuple[float, float],
+                    focal_px: float = 1400.0, width: int = 512, height: int = 512,
+                    ) -> Iterator[Camera]:
+    """Generate a smooth street-level camera path inside the scene extent."""
+    rng = np.random.default_rng(cfg.seed)
+    ex, ey = extent_xy
+    pos = np.array([ex * 0.3, ey * 0.3, cfg.eye_height])
+    heading = rng.uniform(0, 2 * np.pi)
+    dt = 1.0 / cfg.fps
+    for t in range(n_frames):
+        heading += np.deg2rad(cfg.yaw_rate_dps) * dt * np.sin(0.2 * t * dt * 2 * np.pi + 1.0)
+        step = cfg.speed_mps * dt
+        pos = pos + step * np.array([np.cos(heading), np.sin(heading), 0.0])
+        # reflect at scene borders
+        for i, e in enumerate((ex, ey)):
+            if pos[i] < 0.05 * e or pos[i] > 0.95 * e:
+                heading += np.pi / 2
+                pos[i] = np.clip(pos[i], 0.05 * e, 0.95 * e)
+        bob = cfg.head_bob_m * np.sin(2 * np.pi * cfg.head_bob_hz * t * dt)
+        p = pos + np.array([0, 0, bob])
+        target = p + np.array([np.cos(heading), np.sin(heading), -0.05])
+        yield make_camera(p, target, focal_px, width, height)

@@ -1,0 +1,160 @@
+"""Runtime Gaussian management (paper §4.3).
+
+The cloud keeps a management table tracking which Gaussians the client holds;
+per LoD-sync (every `w` frames) it transmits only:
+
+  * the **Δcut** — Gaussians newly needed and not cached on the client
+    (attribute payload, compressed by repro.core.compression);
+  * the **cut-membership delta** — ids entering/leaving the render queue
+    (ids only; Fig. 7 temporal similarity makes this ~1% of the cut).
+
+Both sides then run the *same* reuse-window eviction rule (w_r* = 32 syncs by
+default) on identical inputs, so no eviction traffic is needed and the two
+tables stay consistent — the GC-like co-design of the paper. The client
+renders its exact received cut between syncs (DESIGN.md §7: with the radial
+LoD metric the cut is orientation-free, so head rotation needs no new data).
+
+State is a dense bitmap over padded node ids (5 bytes/node on the cloud —
+~5 MB per million Gaussians), sharded with the tree on the cloud mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ID_BYTES = 4          # plain 32-bit ids on the wire
+ID_BYTES_DELTA = 2    # delta-coded ids (sorted ascending, varint-ish) — model
+SYNC_HEADER_BYTES = 64
+POSE_UPLINK_BYTES = 100  # client → cloud pose per frame (paper §2.1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ManagerState:
+    """Cloud-side management table (the client mirrors it deterministically)."""
+
+    client_has: jax.Array   # (N,) bool — which Gaussians the client stores
+    last_used: jax.Array    # (N,) int32 — sync index when last in a cut
+    cut_prev: jax.Array     # (N,) bool — previous cut (for membership deltas)
+
+    @staticmethod
+    def initial(n: int) -> "ManagerState":
+        return ManagerState(
+            client_has=jnp.zeros((n,), bool),
+            last_used=jnp.full((n,), -(2**30), jnp.int32),
+            cut_prev=jnp.zeros((n,), bool),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SyncPlan:
+    """What one LoD sync transmits (masks over node ids + byte accounting)."""
+
+    delta_data: jax.Array    # (N,) bool — Δcut: attribute payload to send
+    cut_add: jax.Array       # (N,) bool — ids entering the render queue
+    cut_remove: jax.Array    # (N,) bool — ids leaving the render queue
+    evicted: jax.Array       # (N,) bool — dropped by the shared reuse rule
+    n_delta: jax.Array       # () int32
+    n_resident: jax.Array    # () int32 — client occupancy after the sync
+    payload_bytes: jax.Array  # () float32 — given bytes/Gaussian (see below)
+
+    def wire_bytes(self, bytes_per_gaussian: float) -> jax.Array:
+        ids = (self.cut_add.sum() + self.cut_remove.sum()).astype(jnp.float32)
+        return (self.n_delta.astype(jnp.float32) * bytes_per_gaussian
+                + ids * ID_BYTES_DELTA + SYNC_HEADER_BYTES)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cloud_sync(state: ManagerState, cut_mask: jax.Array, t: jax.Array,
+               w_star: jax.Array) -> Tuple[ManagerState, SyncPlan]:
+    """One management-table update on the cloud (paper Fig. 9, left).
+
+    t is the sync counter; w_star the shared reuse threshold (in syncs)."""
+    delta_data = cut_mask & ~state.client_has
+    cut_add = cut_mask & ~state.cut_prev
+    cut_remove = state.cut_prev & ~cut_mask
+
+    last_used = jnp.where(cut_mask, t, state.last_used)
+    has = state.client_has | cut_mask
+    evicted = has & ((t - last_used) > w_star)
+    has = has & ~evicted
+
+    new_state = ManagerState(client_has=has, last_used=last_used, cut_prev=cut_mask)
+    plan = SyncPlan(
+        delta_data=delta_data, cut_add=cut_add, cut_remove=cut_remove,
+        evicted=evicted,
+        n_delta=delta_data.sum().astype(jnp.int32),
+        n_resident=has.sum().astype(jnp.int32),
+        payload_bytes=jnp.float32(0.0),
+    )
+    return new_state, plan
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClientState:
+    """Client-side mirror: reconstructs the same table from the wire data only
+    (Δcut ids + cut add/remove ids) — used to *prove* consistency in tests."""
+
+    has: jax.Array
+    last_used: jax.Array
+    cut: jax.Array  # current render queue (bool mask)
+
+    @staticmethod
+    def initial(n: int) -> "ClientState":
+        return ClientState(
+            has=jnp.zeros((n,), bool),
+            last_used=jnp.full((n,), -(2**30), jnp.int32),
+            cut=jnp.zeros((n,), bool),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def client_sync(state: ClientState, delta_data: jax.Array, cut_add: jax.Array,
+                cut_remove: jax.Array, t: jax.Array, w_star: jax.Array
+                ) -> ClientState:
+    """Apply one received sync. Inputs are exactly what came off the wire."""
+    cut = (state.cut | cut_add) & ~cut_remove
+    has = state.has | delta_data          # insert received Gaussians
+    last_used = jnp.where(cut, t, state.last_used)
+    has = has | cut                       # cut members are resident by definition
+    keep = (t - last_used) <= w_star
+    has = has & keep
+    return ClientState(has=has, last_used=last_used, cut=cut)
+
+
+def gather_payload(tree_gaussians, delta_mask: jax.Array, budget: int):
+    """Compact Δcut ids (sorted, -1 padded) for payload gather/compression."""
+    (ids,) = jnp.nonzero(delta_mask, size=budget, fill_value=-1)
+    count = delta_mask.sum().astype(jnp.int32)
+    return ids.astype(jnp.int32), count
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (independent oracle for the property tests)
+# ---------------------------------------------------------------------------
+
+
+def reference_manager_np(cut_masks: np.ndarray, w_star: int):
+    """Straight-line trace of the paper's table semantics over a cut sequence.
+
+    cut_masks: (F, N) bool. Returns per-sync (delta_counts, resident_counts)."""
+    f, n = cut_masks.shape
+    has = np.zeros(n, bool)
+    last = np.full(n, -(2**30), np.int64)
+    deltas, residents = [], []
+    for t in range(f):
+        cut = cut_masks[t]
+        deltas.append(int((cut & ~has).sum()))
+        last[cut] = t
+        has |= cut
+        has &= (t - last) <= w_star
+        residents.append(int(has.sum()))
+    return np.asarray(deltas), np.asarray(residents)

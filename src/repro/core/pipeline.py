@@ -1,0 +1,207 @@
+"""End-to-end collaborative rendering session (paper Fig. 9 / Fig. 10).
+
+Cloud side (per LoD sync, every `w` frames):
+  temporal-aware LoD search → cut → management-table sync → Δcut compression.
+Client side (every frame):
+  decode Δcut into the local store → render queue = received cut →
+  shared stereo preprocessing → left raster → triangulation shift-merge →
+  right raster. Only client-side work is on the motion-to-photon path.
+
+The session also keeps full byte/work accounting so the benchmarks can
+reproduce the paper's bandwidth/speedup figures."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core import lod_search as ls
+from repro.core import manager as mgr
+from repro.core.binning import BinConfig, bin_left, bin_right
+from repro.core.camera import Camera, StereoRig
+from repro.core.gaussians import Gaussians
+from repro.core.lod_tree import LodTree
+from repro.core.projection import Splats, depth_ranks, project
+from repro.core.raster import render_reference, render_tiles
+from repro.core.stereo import alpha_skip_stats, n_categories, stereo_lists
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    tau: float = 48.0            # LoD threshold τ* in pixels
+    w: int = 4                   # LoD sync interval in frames (paper default)
+    w_star: int = 32             # reuse window w_r* in syncs (paper default)
+    cut_budget: int = 4096
+    tile: int = 16
+    list_len: int = 256
+    max_pairs: int = 1 << 16
+    k_codes: int = 256
+    use_compression: bool = True
+
+
+@dataclasses.dataclass
+class FrameStats:
+    frame: int
+    synced: bool
+    cut_size: int
+    delta_size: int
+    sync_bytes: float
+    nodes_touched: int
+    resweeps: int
+    client_resident: int
+    stereo: Optional[object] = None
+
+
+class CollaborativeSession:
+    """Host-level driver pairing a cloud state machine with a client mirror."""
+
+    def __init__(self, tree: LodTree, cfg: SessionConfig, rig_template: StereoRig):
+        self.tree = tree
+        self.cfg = cfg
+        self.codec = comp.fit_codec(tree.gaussians, k_codes=cfg.k_codes, iters=6)
+        self.bytes_per_g = (comp.wire_bytes_per_gaussian(self.codec)
+                            if cfg.use_compression
+                            else 4 * (3 + 3 + 4 + 1 + 3 * tree.gaussians.sh.shape[1]))
+        n = tree.n_pad
+        self.mgr_state = mgr.ManagerState.initial(n)
+        self.client = mgr.ClientState.initial(n)
+        self.temporal: Optional[ls.TemporalState] = None
+        # client-side attribute store (decoded values — quality includes codec)
+        z = tree.gaussians
+        self.client_store = Gaussians(
+            mu=jnp.zeros_like(z.mu), log_scale=jnp.zeros_like(z.log_scale),
+            quat=jnp.zeros_like(z.quat).at[:, 0].set(1.0),
+            opacity=jnp.zeros_like(z.opacity), sh=jnp.zeros_like(z.sh))
+        self.rig_template = rig_template
+        self.sync_index = 0
+        self.frame_index = 0
+        self.current_cut_ids: Optional[jax.Array] = None
+
+    # -- cloud ---------------------------------------------------------------
+
+    def _lod_search(self, cam_pos) -> ls.CutResult:
+        focal = jnp.float32(self.rig_template.left.focal)
+        tau = jnp.float32(self.cfg.tau)
+        if self.temporal is None:
+            cut, self.temporal = ls.full_search(self.tree, cam_pos, focal, tau)
+        else:
+            cut, self.temporal = ls.temporal_search(self.tree, self.temporal,
+                                                    cam_pos, focal, tau)
+        return cut
+
+    def _sync(self, cam_pos) -> Tuple[FrameStats, jax.Array]:
+        cut = self._lod_search(jnp.asarray(cam_pos, jnp.float32))
+        mask = cut.mask(self.tree)
+        t = jnp.int32(self.sync_index)
+        self.mgr_state, plan = mgr.cloud_sync(self.mgr_state, mask, t,
+                                              jnp.int32(self.cfg.w_star))
+        # wire: Δcut payload (compressed) + cut membership deltas
+        ids, n_delta = mgr.gather_payload(self.tree.gaussians, plan.delta_data,
+                                          self.cfg.cut_budget)
+        payload = self.tree.gaussians.slice_rows(jnp.clip(ids, 0))
+        if self.cfg.use_compression:
+            enc = comp.encode(self.codec, payload)
+            dec = comp.decode(self.codec, enc, payload.sh.shape[1])
+        else:
+            dec = payload
+        # client applies the sync
+        self.client = mgr.client_sync(self.client, plan.delta_data, plan.cut_add,
+                                      plan.cut_remove, t, jnp.int32(self.cfg.w_star))
+        valid = (ids >= 0)[:, None]
+        safe_ids = jnp.clip(ids, 0)
+        st = self.client_store
+        self.client_store = Gaussians(
+            mu=st.mu.at[safe_ids].set(jnp.where(valid, dec.mu, st.mu[safe_ids])),
+            log_scale=st.log_scale.at[safe_ids].set(
+                jnp.where(valid, dec.log_scale, st.log_scale[safe_ids])),
+            quat=st.quat.at[safe_ids].set(jnp.where(valid, dec.quat, st.quat[safe_ids])),
+            opacity=st.opacity.at[safe_ids].set(
+                jnp.where(valid[:, 0], dec.opacity, st.opacity[safe_ids])),
+            sh=st.sh.at[safe_ids].set(
+                jnp.where(valid[:, :, None], dec.sh, st.sh[safe_ids])),
+        )
+        gids, count, overflow = ls.cut_gids(cut, self.tree, self.cfg.cut_budget)
+        self.current_cut_ids = gids
+        stats = FrameStats(
+            frame=self.frame_index, synced=True,
+            cut_size=int(count), delta_size=int(n_delta),
+            sync_bytes=float(plan.wire_bytes(self.bytes_per_g)),
+            nodes_touched=int(cut.nodes_touched),
+            resweeps=int(np.asarray(cut.resweep).sum()),
+            client_resident=int(plan.n_resident))
+        self.sync_index += 1
+        return stats, gids
+
+    # -- client --------------------------------------------------------------
+
+    def render(self, rig: StereoRig, gids: jax.Array):
+        cfg = self.cfg
+        queue = self.client_store.slice_rows(jnp.clip(gids, 0))
+        # mask out padding rows by zero opacity
+        queue = dataclasses.replace(
+            queue, opacity=jnp.where(gids >= 0, queue.opacity, 0.0))
+        return render_stereo(queue, rig, tile=cfg.tile, list_len=cfg.list_len,
+                             max_pairs=cfg.max_pairs)
+
+    # -- frame loop ------------------------------------------------------------
+
+    def step(self, rig: StereoRig, render: bool = True):
+        """Advance one VR frame. LoD sync happens every cfg.w frames."""
+        synced = self.frame_index % self.cfg.w == 0 or self.current_cut_ids is None
+        if synced:
+            stats, gids = self._sync(np.asarray(rig.left.pos))
+        else:
+            gids = self.current_cut_ids
+            stats = FrameStats(frame=self.frame_index, synced=False,
+                               cut_size=int((np.asarray(gids) >= 0).sum()),
+                               delta_size=0,
+                               sync_bytes=float(mgr.POSE_UPLINK_BYTES),
+                               nodes_touched=0, resweeps=0,
+                               client_resident=int(self.client.has.sum()))
+        out = self.render(rig, gids) if render else None
+        self.frame_index += 1
+        return stats, out
+
+
+def render_stereo(queue: Gaussians, rig: StereoRig, *, tile: int = 16,
+                  list_len: int = 256, max_pairs: int = 1 << 16):
+    """Client stereo pipeline: shared preprocessing → left raster →
+    triangulation shift-merge → right raster. Returns (left, right, stats)."""
+    cam = rig.left
+    max_disp = rig.max_disparity_px()
+    n_cat = n_categories(max_disp, tile)
+    tiles_x_r = -(-cam.width // tile)
+    wide_width = (tiles_x_r + n_cat - 1) * tile
+    wide = dataclasses.replace(cam, width=wide_width)
+
+    splats = project(queue, rig, wide)
+    ranks = depth_ranks(splats)
+    bcfg = BinConfig(tile=tile, max_pairs=max_pairs, list_len=list_len)
+
+    left_lists = bin_left(splats, wide_width, cam.height, bcfg, ranks)
+    img_l, hits = render_tiles(left_lists, splats, width=cam.width,
+                               height=cam.height, tile=tile, eye="left")
+    right_lists = stereo_lists(left_lists, splats, ranks, tile=tile,
+                               width=cam.width, n_cat=n_cat)
+    img_r, _ = render_tiles(right_lists, splats, width=cam.width,
+                            height=cam.height, tile=tile, eye="right")
+    stats = alpha_skip_stats(left_lists, right_lists, hits, splats)
+    return img_l, img_r, (splats, left_lists, right_lists, stats)
+
+
+def render_stereo_reference(queue: Gaussians, rig: StereoRig):
+    """Two fully independent eye renders (the BASE baseline of Fig. 16)."""
+    cam = rig.left
+    max_disp = rig.max_disparity_px()
+    n_cat = n_categories(max_disp, 16)
+    tiles_x_r = -(-cam.width // 16)
+    wide = dataclasses.replace(cam, width=(tiles_x_r + n_cat - 1) * 16)
+    splats = project(queue, rig, wide)
+    img_l = render_reference(splats, width=cam.width, height=cam.height, eye="left")
+    img_r = render_reference(splats, width=cam.width, height=cam.height, eye="right")
+    return img_l, img_r

@@ -1,0 +1,109 @@
+"""Shared stereo preprocessing: EWA splat projection (paper Fig. 13 left).
+
+One pass over the render queue serves BOTH eyes: projection happens on the
+*widened* left camera (covers the union of the two frusta); the right-eye
+splat center is obtained later by the triangulation shift x_R = x_L − B·f/z.
+Depth (camera z) is identical across a rectified pair, so one depth sort
+serves both eyes. View-dependent SH color is evaluated per eye inside this
+same pass (two cheap SH dots; see DESIGN.md §2 — required for bit-accuracy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import Camera, StereoRig
+from repro.core.gaussians import Gaussians, covariance, eval_sh
+
+COV_BLUR = 0.3        # low-pass dilation added to the 2D covariance (3DGS std)
+ALPHA_MIN = 1.0 / 255.0
+ALPHA_MAX = 0.99
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Splats:
+    """Projected 2D Gaussians in widened-left pixel coordinates."""
+
+    mean2d: jax.Array     # (M, 2)
+    depth: jax.Array      # (M,) camera z (same for both eyes)
+    conic: jax.Array      # (M, 3) inverse-covariance (A, B, C): [[A,B],[B,C]]
+    ext: jax.Array        # (M, 2) conservative half-extents of the α≥α_min ellipse
+    color_l: jax.Array    # (M, 3)
+    color_r: jax.Array    # (M, 3)
+    opacity: jax.Array    # (M,)
+    disparity: jax.Array  # (M,) B·f/z ≥ 0
+    visible: jax.Array    # (M,) bool
+
+    @property
+    def m(self) -> int:
+        return self.mean2d.shape[0]
+
+
+def project(g: Gaussians, rig: StereoRig, wide: Camera) -> Splats:
+    """EWA projection of the render queue onto the widened camera."""
+    cam = wide
+    t = cam.world_to_cam(g.mu)                      # (M, 3)
+    z = t[:, 2]
+    f = cam.focal
+    inv_z = 1.0 / jnp.maximum(z, 1e-6)
+    mean2d = jnp.stack([f * t[:, 0] * inv_z + cam.cx,
+                        f * t[:, 1] * inv_z + cam.cy], axis=-1)
+
+    # Jacobian of the perspective map at the splat center
+    zero = jnp.zeros_like(z)
+    j = jnp.stack([
+        jnp.stack([f * inv_z, zero, -f * t[:, 0] * inv_z * inv_z], -1),
+        jnp.stack([zero, f * inv_z, -f * t[:, 1] * inv_z * inv_z], -1),
+    ], axis=-2)                                      # (M, 2, 3)
+    w = cam.rot.T                                    # world→cam
+    cov3 = covariance(g)                             # (M, 3, 3)
+    jw = j @ w
+    cov2 = jw @ cov3 @ jnp.swapaxes(jw, -1, -2)      # (M, 2, 2)
+    a = cov2[:, 0, 0] + COV_BLUR
+    b = cov2[:, 0, 1]
+    c = cov2[:, 1, 1] + COV_BLUR
+
+    det = a * c - b * b
+    det = jnp.maximum(det, 1e-12)
+    conic = jnp.stack([c / det, -b / det, a / det], axis=-1)
+
+    # conservative AABB of the α ≥ α_min iso-ellipse (identical for both eyes)
+    tau = 2.0 * jnp.log(jnp.maximum(g.opacity, ALPHA_MIN) / ALPHA_MIN)
+    ext = jnp.sqrt(jnp.maximum(tau[:, None], 0.0)
+                   * jnp.stack([a, c], axis=-1))     # (M, 2)
+
+    # per-eye view-dependent color
+    dir_l = g.mu - rig.left.pos
+    dir_r = g.mu - rig.right.pos
+    dir_l = dir_l / (jnp.linalg.norm(dir_l, axis=-1, keepdims=True) + 1e-12)
+    dir_r = dir_r / (jnp.linalg.norm(dir_r, axis=-1, keepdims=True) + 1e-12)
+    color_l = eval_sh(g.sh, dir_l)
+    color_r = eval_sh(g.sh, dir_r)
+
+    disparity = rig.baseline * f * inv_z
+
+    visible = ((z > cam.near) & (z < cam.far)
+               & (g.opacity > ALPHA_MIN)
+               & (mean2d[:, 0] + ext[:, 0] >= 0.0)
+               & (mean2d[:, 0] - ext[:, 0] <= cam.width)
+               & (mean2d[:, 1] + ext[:, 1] >= 0.0)
+               & (mean2d[:, 1] - ext[:, 1] <= cam.height))
+
+    return Splats(mean2d=mean2d, depth=z, conic=conic, ext=ext,
+                  color_l=color_l, color_r=color_r, opacity=g.opacity,
+                  disparity=disparity, visible=visible)
+
+
+def depth_ranks(s: Splats) -> jax.Array:
+    """(M,) front-to-back rank shared by both eyes (invisible rank last).
+
+    Ties broken by index (stable) so blend order is deterministic."""
+    key = jnp.where(s.visible, s.depth, jnp.inf)
+    order = jnp.argsort(key, stable=True)
+    ranks = jnp.zeros((s.m,), jnp.int32).at[order].set(
+        jnp.arange(s.m, dtype=jnp.int32))
+    return ranks

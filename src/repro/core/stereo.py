@@ -1,0 +1,134 @@
+"""Stereo rasterization (paper §4.4): triangulation-based right-eye list
+construction from the left-eye tile lists, with a k-way sorted merge.
+
+The SRU/line-buffer dataflow of §5 is reproduced exactly:
+  * every splat in a left tile T_c (widened grid) has disparity d = B·f/z;
+    its right-eye footprint is its left footprint shifted by −d, so from the
+    right tile T_cx's perspective, candidates come ONLY from left columns
+    cx .. cx+n_cat−1 (n_cat = ⌊max_disparity/tile⌋ + 2 line-buffer rows);
+  * each source list is already depth-sorted (shared ranks), so the right
+    list is a duplicate-removing k-way merge — no re-sort;
+  * an x-overlap test (the SRU's re-projection check) drops entries whose
+    shifted footprint misses the tile.
+
+`stereo_lists` is proven (tests) to equal `binning.bin_right` — an
+independent construction that re-bins shifted centers directly — which is in
+turn proven to make the right-eye render bitwise-equal to the full per-eye
+reference. Hence the pipeline is bit-accurate end to end while sharing
+projection, SH, sorting and binning work across eyes."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binning import BinConfig, TileLists, corner_r2
+from repro.core.projection import Splats
+
+
+def n_categories(max_disparity_px: float, tile: int) -> int:
+    """Line-buffer rows needed (paper uses 4 at tile=4, max disparity 16)."""
+    return int(max_disparity_px // tile) + 2
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "width", "n_cat"))
+def stereo_lists(left: TileLists, s: Splats, ranks: jax.Array, *, tile: int,
+                 width: int, n_cat: int) -> TileLists:
+    """Build right-eye tile lists by shift-merging the left (widened) lists."""
+    tiles_x_r = -(-width // tile)
+    tiles_y = left.tiles_y
+    tiles_x_w = left.tiles_x
+    l_len = left.lists.shape[1]
+    m = s.m
+
+    wide = left.lists.reshape(tiles_y, tiles_x_w, l_len)
+
+    # source lists for right tile column cx: left columns cx .. cx+n_cat-1
+    def gather_sources(cx):
+        cols = jnp.clip(cx + jnp.arange(n_cat), 0, tiles_x_w - 1)
+        src = wide[:, cols, :]                      # (tiles_y, n_cat, L)
+        # mark out-of-range clipped columns invalid
+        ok = (cx + jnp.arange(n_cat)) < tiles_x_w
+        return jnp.where(ok[None, :, None], src, -1)
+
+    src = jax.vmap(gather_sources, out_axes=1)(jnp.arange(tiles_x_r))
+    # src: (tiles_y, tiles_x_r, n_cat, L)
+    cand = src.reshape(tiles_y * tiles_x_r, n_cat * l_len)
+
+    g = jnp.clip(cand, 0, m - 1)
+    valid = cand >= 0
+
+    # SRU re-projection: does the shifted footprint overlap this right tile?
+    x_r = s.mean2d[g, 0] - s.disparity[g]
+    ext_x = s.ext[g, 0]
+    cx_of = (jnp.arange(tiles_y * tiles_x_r) % tiles_x_r)
+    cy_of = (jnp.arange(tiles_y * tiles_x_r) // tiles_x_r)
+    lo = (cx_of * tile).astype(jnp.float32)[:, None]
+    hi = lo + tile
+    overlap = (x_r + ext_x >= lo) & (x_r - ext_x <= hi)
+    # same conservative corner-circle cull as binning (keeps merge == rebin)
+    r2 = corner_r2(s.conic, s.opacity)[g]
+    y_r = s.mean2d[g, 1]
+    ylo = (cy_of * tile).astype(jnp.float32)[:, None]
+    dx = jnp.maximum(jnp.maximum(lo - x_r, x_r - hi), 0.0)
+    dy = jnp.maximum(jnp.maximum(ylo - y_r, y_r - (ylo + tile)), 0.0)
+    include = valid & overlap & (dx * dx + dy * dy <= r2)
+
+    # k-way merge with duplicate removal: sort by (rank, source slot) and keep
+    # the first occurrence of each splat. Each source list is already sorted,
+    # so ranks are the line-buffer head-selection order.
+    rank_key = jnp.where(include, ranks[g], jnp.iinfo(jnp.int32).max)
+    # stable sort by rank ⇒ ties (same splat, multiple sources) keep slot order
+    order = jnp.argsort(rank_key, axis=1, stable=True)
+    sorted_g = jnp.take_along_axis(g, order, axis=1)
+    sorted_inc = jnp.take_along_axis(include, order, axis=1)
+    sorted_rank = jnp.take_along_axis(rank_key, order, axis=1)
+    dup = jnp.concatenate([
+        jnp.zeros((cand.shape[0], 1), bool),
+        sorted_rank[:, 1:] == sorted_rank[:, :-1]], axis=1)
+    keep = sorted_inc & ~dup
+
+    # compact: stable re-sort by keep-flag keeps merge order among kept
+    comp_key = jnp.where(keep, jnp.arange(n_cat * l_len)[None, :], jnp.iinfo(jnp.int32).max)
+    comp_order = jnp.argsort(comp_key, axis=1)
+    comp_g = jnp.take_along_axis(sorted_g, comp_order, axis=1)
+    comp_keep = jnp.take_along_axis(keep, comp_order, axis=1)
+    out = jnp.where(comp_keep, comp_g, -1)[:, :l_len]
+    counts = comp_keep.sum(axis=1).astype(jnp.int32)
+
+    overflow = left.overflow | (counts > l_len).any()
+    return TileLists(lists=out.astype(jnp.int32),
+                     counts=jnp.minimum(counts, l_len),
+                     overflow=overflow, tiles_x=tiles_x_r, tiles_y=tiles_y)
+
+
+@dataclasses.dataclass(frozen=True)
+class StereoStats:
+    """Work-sharing accounting for the client (feeds Figs. 18/21/22)."""
+
+    shared_preprocess: int      # splats projected once instead of twice
+    left_blends: int            # (tile, entry) pairs blended for the left eye
+    right_candidates: int       # entries merged for the right eye
+    right_alpha_skipped: int    # right candidates that failed every left α-check
+
+
+def alpha_skip_stats(left: TileLists, right: TileLists, left_hits: jax.Array,
+                     s: Splats) -> StereoStats:
+    """How much right-eye work the α-check forwarding removes (paper step ②)."""
+    m = s.m
+    hit_any = jnp.zeros((m + 1,), bool)
+    g = jnp.where(left.lists >= 0, left.lists, m)
+    hit_any = hit_any.at[g.reshape(-1)].max(left_hits.reshape(-1))
+    rg = jnp.where(right.lists >= 0, right.lists, m)
+    r_valid = right.lists >= 0
+    r_hit = hit_any[rg] & r_valid
+    return StereoStats(
+        shared_preprocess=int(s.visible.sum()),
+        left_blends=int((left.lists >= 0).sum()),
+        right_candidates=int(r_valid.sum()),
+        right_alpha_skipped=int((r_valid & ~r_hit).sum()),
+    )

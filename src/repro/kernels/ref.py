@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Where a core module already implements the math in pure jnp, the oracle
+reuses it (the core path is itself tested against independent references —
+e.g. raster vs the untiled per-pixel renderer, lod sweep vs the numpy
+level-iteration). Attention gets an independent naive softmax here."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lod_search as _ls
+from repro.core.compression import vq_assign_ref as ref_vq_assign  # noqa: F401
+from repro.core.projection import ALPHA_MAX, ALPHA_MIN
+
+
+def ref_rasterize(entries: jax.Array, counts: jax.Array, *, tile: int,
+                  tiles_x: int, eps_t: float = 0.0):
+    """Oracle for rasterize.rasterize_tiles_pallas (same entry layout)."""
+    n_tiles, l_max, _ = entries.shape
+
+    yy, xx = jnp.meshgrid(jnp.arange(tile), jnp.arange(tile), indexing="ij")
+
+    def tile_fn(tid, ent, count):
+        ox = (tid % tiles_x) * tile
+        oy = (tid // tiles_x) * tile
+        px = xx.astype(jnp.float32) + ox + 0.5
+        py = yy.astype(jnp.float32) + oy + 0.5
+
+        def step(carry, i):
+            color, t_acc, hits, alive = carry
+            e = ent[i]
+            dx = px - e[0]
+            dy = py - e[1]
+            power = 0.5 * (e[2] * dx * dx + 2 * e[3] * dx * dy + e[4] * dy * dy)
+            a = jnp.minimum(e[8] * jnp.exp(-power), ALPHA_MAX)
+            a = jnp.where(a >= ALPHA_MIN, a, 0.0)
+            active = alive & (i < count)
+            a = jnp.where(active, a, 0.0)
+            contrib = t_acc * a
+            color = color + contrib[..., None] * e[5:8]
+            t_acc = t_acc * (1.0 - a)
+            hits = hits.at[i].set(active & jnp.any(a > 0.0))
+            alive = alive & (jnp.max(t_acc) > eps_t)
+            return (color, t_acc, hits, alive), None
+
+        init = (jnp.zeros((tile, tile, 3), jnp.float32),
+                jnp.ones((tile, tile), jnp.float32),
+                jnp.zeros((l_max,), jnp.bool_),
+                jnp.bool_(True))
+        (color, _t, hits, _a), _ = jax.lax.scan(step, init, jnp.arange(l_max))
+        return color, hits
+
+    return jax.vmap(tile_fn)(jnp.arange(n_tiles), entries, counts)
+
+
+def ref_lod_slab_sweep(slab_mu, slab_size, slab_parent, slab_level,
+                       slab_is_leaf, slab_valid, root_parent_expand,
+                       cam_pos, focal, tau, *, max_depth: int):
+    fn = functools.partial(_ls._slab_sweep_one, cam_pos=jnp.asarray(cam_pos, jnp.float32),
+                           focal=focal, tau=tau, max_depth=max_depth)
+    return jax.vmap(fn)(slab_mu, slab_size, slab_parent, slab_level,
+                        slab_is_leaf, slab_valid, root_parent_expand)
+
+
+def ref_stereo_merge(src_ranks: jax.Array, src_ids: jax.Array):
+    """Vectorized merge oracle: stable sort by rank, drop INF and duplicates."""
+    n_tiles, n_cat, l_len = src_ranks.shape
+    r = src_ranks.reshape(n_tiles, -1)
+    g = src_ids.reshape(n_tiles, -1)
+    order = jnp.argsort(r, axis=1, stable=True)
+    sr = jnp.take_along_axis(r, order, axis=1)
+    sg = jnp.take_along_axis(g, order, axis=1)
+    dup = jnp.concatenate([jnp.zeros((n_tiles, 1), bool),
+                           sr[:, 1:] == sr[:, :-1]], axis=1)
+    keep = (sr < 2**30) & ~dup
+    comp_key = jnp.where(keep, jnp.arange(sr.shape[1])[None, :], 2**30)
+    comp_order = jnp.argsort(comp_key, axis=1)
+    out = jnp.take_along_axis(jnp.where(keep, sg, -1), comp_order, axis=1)
+    return out[:, :l_len].astype(jnp.int32), keep.sum(1).astype(jnp.int32)
+
+
+def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Naive (materialized-scores) GQA attention oracle."""
+    b, h, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    group = h // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (d ** 0.5)
+    row = jnp.arange(lq)[:, None]
+    col = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask = mask & (col <= row)
+    if window > 0:
+        mask = mask & (col > row - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

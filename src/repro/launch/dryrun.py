@@ -1,0 +1,224 @@
+# The 512 placeholder devices MUST be requested before jax initializes —
+# before ANY other import, including `from repro...` (jax locks the device
+# count on first init). Do NOT set this anywhere global (conftest/pyproject):
+# smoke tests and benches must see the single real CPU device.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: .lower().compile() for every (arch × shape × mesh).
+
+For each cell this lowers the real train_step / prefill / decode_step with
+full in/out shardings onto the production mesh, compiles it, and records:
+  memory_analysis()  — per-device bytes (proves it fits a 16 GB v5e chip)
+  cost_analysis()    — HLO flops / bytes (feeds §Roofline)
+  collective bytes   — parsed from the compiled HLO text (launch/roofline.py)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.roofline import HW, roofline_terms
+from repro.models.config import (SHAPES, ShapeConfig, get_shape,
+                                 long_context_capable)
+from repro.models.model_zoo import (ModelBundle, batch_logical_axes, get_model,
+                                    input_specs)
+from repro.sharding.context import activation_rules, use_rules
+from repro.sharding.partitioning import LOGICAL_RULES, make_shardings
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def skip_reason(cfg, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not long_context_capable(cfg):
+        return ("full-attention arch: 500k decode needs sub-quadratic "
+                "attention (DESIGN.md §4)")
+    return None
+
+
+def _batch_shardings(mesh, cfg, shape):
+    rules = dict(LOGICAL_RULES)
+    ax = batch_logical_axes(cfg, shape)
+    specs = input_specs(cfg, shape)
+    return make_shardings(mesh, specs, ax, rules), specs
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, for_compile: bool = True):
+    """Lower one (arch × shape) cell on `mesh`. Returns (lowered, meta)."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    model = get_model(cfg)
+
+    p_shapes, p_axes = model.abstract_params()
+    p_shard = make_shardings(mesh, p_shapes, p_axes)
+    b_shard, b_specs = _batch_shardings(mesh, cfg, shape)
+    rules = activation_rules(mesh)
+
+    if shape.mode == "train":
+        ocfg = opt.OptimizerConfig()
+        step = make_train_step(model, ocfg, compress_grads=False)
+        o_abstract = jax.eval_shape(opt.init, p_shapes)
+        o_shard = make_shardings(mesh, o_abstract,
+                                 opt.state_axes(p_axes))
+
+        def train_fn(params, opt_state, batch):
+            return step(params, opt_state, None, batch)
+
+        with mesh:
+            with use_rules(rules):
+                lowered = jax.jit(
+                    train_fn,
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    donate_argnums=(0, 1),
+                ).lower(p_shapes, o_abstract, b_specs)
+        return lowered, dict(mode="train", tokens=shape.tokens)
+
+    if shape.mode == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch)
+
+        with mesh:
+            with use_rules(rules):
+                lowered = jax.jit(
+                    prefill_fn,
+                    in_shardings=(p_shard, b_shard),
+                ).lower(p_shapes, b_specs)
+        return lowered, dict(mode="prefill", tokens=shape.tokens)
+
+    # decode: one token against a seq_len cache
+    c_abstract = model.abstract_cache(shape.global_batch, shape.seq_len)
+    c_shard = make_shardings(mesh, c_abstract, model.cache_axes())
+
+    def decode_fn(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    with mesh:
+        with use_rules(rules):
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_shard, c_shard, b_shard),
+                donate_argnums=(1,),
+            ).lower(p_shapes, c_abstract, b_specs)
+    return lowered, dict(mode="decode", tokens=shape.global_batch)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             skip_existing: bool = True) -> dict:
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    rec = dict(arch=arch, shape=shape_name, mesh=mesh_kind, status="ok")
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        _write(out_path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        ana = hlo_analyze(hlo)  # loop-aware: scan bodies × trip counts
+
+        rec.update(
+            meta,
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=int(mem.argument_size_in_bytes),
+                output_bytes=int(mem.output_size_in_bytes),
+                temp_bytes=int(mem.temp_size_in_bytes),
+                alias_bytes=int(mem.alias_size_in_bytes),
+            ),
+            flops=float(ana["flops"]),
+            bytes_accessed=float(ana["hbm_bytes"]),
+            xla_flops_looponce=float(cost.get("flops", 0.0)),
+            collectives={k: v for k, v in ana.items()
+                         if k.endswith("_bytes") or k.endswith("_count")},
+            model_params=cfg.param_count,
+            model_params_active=cfg.active_param_count,
+        )
+        rec["roofline"] = roofline_terms(rec)
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               skip_existing=not args.force)
+                tag = rec["status"]
+                if tag == "ok":
+                    n_ok += 1
+                    mem_gb = (rec["memory"]["argument_bytes"]
+                              + rec["memory"]["temp_bytes"]) / 1e9
+                    print(f"[ok]   {arch:24s} {shape:12s} {mesh_kind:6s} "
+                          f"mem/dev={mem_gb:6.2f}GB flops={rec['flops']:.3e} "
+                          f"compile={rec['compile_s']:.1f}s", flush=True)
+                elif tag == "skip":
+                    n_skip += 1
+                    print(f"[skip] {arch:24s} {shape:12s} {mesh_kind:6s} "
+                          f"({rec['reason'][:60]})", flush=True)
+                else:
+                    n_err += 1
+                    print(f"[ERR]  {arch:24s} {shape:12s} {mesh_kind:6s} "
+                          f"{rec['error'][:120]}", flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skip, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,367 @@
+"""Loop-aware cost analysis over compiled (post-SPMD, post-fusion) HLO text.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE — for scanned
+layer stacks that under-counts flops/bytes/collective traffic by the trip
+count (× n_layers × kv-chunks …). This module parses the compiled HLO text,
+extracts every computation, recovers loop trip counts from the loop-condition
+compare constants, and aggregates metrics recursively:
+
+  eff(comp) = direct(comp) + Σ_while trip × eff(body) + Σ_call eff(callee)
+
+Metrics:
+  flops      — 2·M·N·K for every dot (fusion-internal dots included);
+  hbm bytes  — Σ (operand + result bytes) of top-level instructions
+               (post-fusion, so fusion internals correctly do NOT count);
+  collective — result-type bytes per collective kind (all-gather /
+               all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+The per-device SPMD module is what's parsed, so every number is per-device.
+Validated against unrolled-loop cost_analysis in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES and dt != "token":
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    param_types: Dict[str, str]
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*{\s*$")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_instr_line(line: str):
+    """Robust 'name = TYPE op(args...)' split (tuple types may contain
+    '/*index=N*/' comments and nested braces)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple type: balanced-paren scan
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rtype = rest[: i + 1]
+                    tail = rest[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        tail = rest[sp + 1:].lstrip()
+    mo = re.match(r"([\w\-]+)\((.*)$", tail)
+    if not mo:
+        return None
+    return name, rtype, mo.group(1), mo.group(2)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                        r"({[^}]*}|%?[\w.\-]+)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = m.group(1)
+                # parameter types from the signature (bracket-aware)
+                sig = line[line.find("("):line.rfind("->")]
+                for pm in re.finditer(
+                        r"%?([\w.\-]+):\s*([a-z][a-z0-9]*\[[0-9,]*\](?:{[^}]*})?)",
+                        sig):
+                    cur.param_types[pm.group(1)] = pm.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed:
+            name, rtype, op, rest = parsed
+            # operand names: inside the first balanced paren region
+            depth, i, args = 1, 0, rest
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        args = rest[:i]
+                        break
+            operands = _OPERAND_RE.findall(args)
+            cur.instrs.append(Instr(name, rtype, op, operands, line))
+    comps["__entry__"] = comps.get(entry, next(iter(comps.values()))) if comps else None
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation,
+               types: Dict[str, str]) -> float:
+    """2 × (result elements) × (contracted size)."""
+    res = _shape_dims(instr.result_type)
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    # contracted size from lhs type + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", instr.line)
+    if not m or not instr.operands:
+        return 2.0 * n_out  # fallback
+    lhs_t = types.get(instr.operands[0])
+    if not lhs_t:
+        return 2.0 * n_out
+    lshape = _shape_dims(lhs_t)
+    if not lshape:
+        return 2.0 * n_out
+    _, ldims = lshape[0]
+    k = 1
+    for ci in m.group(1).split(","):
+        if ci and int(ci) < len(ldims):
+            k *= ldims[int(ci)]
+    return 2.0 * n_out * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation (max s32 constant)."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant" and ins.result_type.startswith("s32"):
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_SKIP_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+                   "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_count: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_count[k] += other.coll_count[k] * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def _comp_types(comp: Computation) -> Dict[str, str]:
+    types = dict(comp.param_types)
+    for ins in comp.instrs:
+        types[ins.name] = ins.result_type
+    return types
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[Tuple[str, bool], Costs] = {}
+
+    def _called(self, instr: Instr) -> List[str]:
+        names = []
+        for m in _CALL_ATTR.finditer(instr.line):
+            grp = m.group(1)
+            for nm in _OPERAND_RE.findall(grp):
+                names.append(nm)
+            if not grp.startswith("{") and not grp.startswith("%"):
+                names.append(grp)
+        return [n for n in names if n in self.comps]
+
+    def _fusion_bytes(self, ins: Instr, types: Dict[str, str]) -> float:
+        """HBM traffic of one fusion call site.
+
+        Operands that are only dynamic-sliced inside the fused computation
+        count at slice size (the scanned stacked-weights pattern); a fusion
+        whose root is dynamic-update-slice is in-place (count 2× update)."""
+        callees = self._called(ins)
+        callee = self.comps.get(callees[0]) if callees else None
+        # result side
+        total = float(_type_bytes(ins.result_type))
+        if callee and callee.instrs:
+            root = callee.instrs[-1]
+            if root.op == "dynamic-update-slice" and len(root.operands) > 1:
+                upd_t = _comp_types(callee).get(root.operands[1])
+                if upd_t:
+                    total = 2.0 * _type_bytes(upd_t)
+        # operand side
+        if callee is None:
+            for opnd in ins.operands:
+                t = types.get(opnd)
+                if t:
+                    total += _type_bytes(t)
+            return total
+        ctypes = _comp_types(callee)
+        params: Dict[int, str] = {}
+        for pname in callee.param_types:
+            m = re.search(r"param_(\d+)", pname)
+            if m:
+                params[int(m.group(1))] = pname
+        for i, opnd in enumerate(ins.operands):
+            t = types.get(opnd)
+            if not t:
+                continue
+            pname = params.get(i)
+            if pname:
+                uses = [u for u in callee.instrs if pname in u.operands]
+                if uses and all(u.op == "dynamic-slice" for u in uses):
+                    total += sum(_type_bytes(u.result_type) for u in uses)
+                    continue
+            total += _type_bytes(t)
+        return total
+
+    def eff(self, comp_name: str, in_fusion: bool = False) -> Costs:
+        key = (comp_name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Costs()  # cycle guard
+        comp = self.comps[comp_name]
+        types = _comp_types(comp)
+        total = Costs()
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                total.flops += _dot_flops(ins, comp, types)
+            for ckind in _COLLECTIVES:
+                if ins.op == ckind or ins.op.startswith(ckind + "-start") or \
+                   ins.op.startswith(ckind + "."):
+                    total.coll[ckind] += _type_bytes(ins.result_type)
+                    total.coll_count[ckind] += 1
+                    break
+            if not in_fusion and ins.op not in _SKIP_BYTES_OPS and \
+                    not ins.op.endswith("-done"):
+                if ins.op == "dynamic-slice":
+                    # reads only the sliced window, not the whole operand
+                    total.hbm_bytes += 2 * _type_bytes(ins.result_type)
+                elif ins.op == "dynamic-update-slice":
+                    # in-place: read+write of the update window
+                    upd_t = (types.get(ins.operands[1])
+                             if len(ins.operands) > 1 else None)
+                    total.hbm_bytes += 2 * _type_bytes(upd_t or ins.result_type)
+                elif ins.op == "while":
+                    pass  # loop state is aliased in place; body accounts for it
+                elif ins.op == "fusion":
+                    total.hbm_bytes += self._fusion_bytes(ins, types)
+                else:
+                    b = _type_bytes(ins.result_type)
+                    for opnd in ins.operands:
+                        t = types.get(opnd)
+                        if t:
+                            b += _type_bytes(t)
+                    total.hbm_bytes += b
+
+            if ins.op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if mb and mb.group(1) in self.comps:
+                    body = mb.group(1)
+                if mc and mc.group(1) in self.comps:
+                    cond = mc.group(1)
+                # primary: XLA's own annotation; fallback: cond constant
+                mt = re.search(r'known_trip_count[^0-9]*(\d+)', ins.line)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    trip = _trip_count(self.comps[cond]) if cond else 1
+                if body:
+                    total.add(self.eff(body, in_fusion), trip)
+            elif ins.op in ("fusion",):
+                for callee in self._called(ins):
+                    sub = self.eff(callee, True)   # internals: flops/coll only
+                    total.flops += sub.flops
+                    for k in _COLLECTIVES:
+                        total.coll[k] += sub.coll[k]
+                        total.coll_count[k] += sub.coll_count[k]
+            elif ins.op in ("call", "conditional", "async-start", "custom-call"):
+                for callee in self._called(ins):
+                    total.add(self.eff(callee, in_fusion), 1.0)
+        self._memo[key] = total
+        return total
+
+    def entry_costs(self) -> Costs:
+        entry = self.comps["__entry__"]
+        return self.eff(entry.name)
+
+
+def analyze(hlo_text: str) -> Dict[str, float]:
+    c = HloCost(hlo_text).entry_costs()
+    out = dict(flops=c.flops, hbm_bytes=c.hbm_bytes,
+               collective_bytes=c.coll_bytes)
+    for k in _COLLECTIVES:
+        out[f"{k}_bytes"] = c.coll[k]
+        out[f"{k}_count"] = c.coll_count[k]
+    return out

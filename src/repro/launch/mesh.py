@@ -1,0 +1,25 @@
+"""Production meshes. TPU v5e pod = 16×16 = 256 chips; multi-pod = 2 pods.
+
+`make_production_mesh` is a FUNCTION (importing this module never touches
+jax device state). Axis semantics:
+  pod   — data parallel across pods (DCN); gradient all-reduce crosses it
+  data  — FSDP + data parallel within a pod (ICI)
+  model — tensor/expert parallel within a pod (ICI)
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Arbitrary mesh (tests use small fake-device meshes)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,124 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+  compute    = HLO_FLOPs / peak_FLOPs            (per-device program)
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+cost_analysis() is per-device under SPMD. collective_bytes is NOT in
+cost_analysis — we parse the compiled HLO: build a symbol table of every
+instruction's result-type byte size, then sum the operand sizes of each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e per-chip constants (assignment-provided)
+HW = dict(
+    peak_flops=197e12,      # bf16 FLOP/s
+    hbm_bw=819e9,           # B/s
+    link_bw=50e9,           # B/s per ICI link
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^)]*\)|[^=\s]+)\s+([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, e.g. 'bf16[8,128]{1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum operand byte sizes per collective op kind.
+
+    Strategy: each collective line declares its own result type; for these
+    ops the operand bytes equal (all-reduce, all-to-all, collective-permute)
+    or are directly derivable from the result type (all-gather output =
+    input × group, reduce-scatter output = input / group). We use the
+    RESULT size as the on-wire proxy for gather/scatter (the larger side —
+    conservative) and result size for the others (= operand size)."""
+    sizes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            # fused forms like all-reduce-start
+            for c in _COLLECTIVES:
+                if op.startswith(c):
+                    kind = c
+                    break
+        if kind is None:
+            continue
+        nbytes = _type_bytes(m.group(2))
+        sizes[kind] += nbytes
+        counts[kind] += 1
+    total = sum(sizes.values())
+    out = {f"{k}_bytes": v for k, v in sizes.items()}
+    out.update({f"{k}_count": counts[k] for k in _COLLECTIVES})
+    out["total_bytes"] = total
+    return out
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Compute the three roofline terms (seconds) + bottleneck for a cell
+    record produced by launch/dryrun.py."""
+    flops = rec.get("flops", 0.0)
+    byts = rec.get("bytes_accessed", 0.0)
+    coll = rec.get("collectives", {}).get("collective_bytes", 0.0)
+    t_compute = flops / HW["peak_flops"]
+    t_memory = byts / HW["hbm_bw"]
+    t_coll = coll / HW["link_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N·D train (N = active params, D = tokens); 2·N·D fwd-only
+    n_active = rec.get("model_params_active", 0)
+    tokens = rec.get("tokens", 0)
+    mode = rec.get("mode", "train")
+    factor = 6 if mode == "train" else 2
+    model_flops = factor * n_active * tokens
+    n_chips = max(rec.get("n_chips", 1), 1)
+    hlo_flops_global = flops * n_chips  # cost_analysis is per-device (SPMD)
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    bound = max(t_compute, t_memory, t_coll)
+    ideal = model_flops / n_chips / HW["peak_flops"]
+    return dict(
+        terms, dominant=dominant.replace("_s", ""),
+        model_flops=model_flops,
+        useful_flops_ratio=useful,
+        roofline_fraction=(ideal / bound) if bound > 0 else 0.0,
+    )

@@ -1,0 +1,1 @@
+"""LM-family architecture zoo (assigned architectures, DESIGN.md §4)."""

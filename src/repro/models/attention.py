@@ -1,0 +1,108 @@
+"""Chunked (flash-style) attention in pure JAX — the dry-run/compile path.
+
+Online-softmax over KV chunks via lax.scan keeps peak memory at
+O(S · chunk) instead of O(S²) — this is what lets prefill_32k and the 500k
+decode cells compile with sane temp memory. Supports causal, sliding-window,
+prefix-LM (bidirectional prefix), cross-attention, GQA/MQA, and single-token
+decode against a cache. The Pallas kernel (repro.kernels.flash_attention)
+implements the same math for the TPU hot path (validated in tests).
+
+GQA layout convention: query head h attends kv head h // (H/Hkv)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: int = 0,
+              prefix_len: Optional[jax.Array] = None,
+              q_offset=0,
+              kv_valid_len: Optional[jax.Array] = None,
+              kv_chunk: int = 1024,
+              q_chunk: int = 0) -> jax.Array:
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, Hkv, Dh) → (B, Sq, H, Dh).
+
+    prefix_len: (B,) or scalar — columns < prefix_len are always visible
+    (prefix-LM). q_offset: global position of q row 0 (decode). kv_valid_len:
+    (B,) or scalar — masks the unfilled cache tail.
+
+    q_chunk > 0 additionally blocks the query dim (outer scan): peak score
+    block becomes (B, q_chunk, H, kv_chunk) instead of (B, Sq, H, kv_chunk) —
+    §Perf iteration 2 (flash-style double blocking)."""
+    if q_chunk and q.shape[1] > q_chunk and q.shape[1] % q_chunk == 0:
+        b_, sq_, h_, hd_ = q.shape
+        nq = sq_ // q_chunk
+        qb = q.reshape(b_, nq, q_chunk, h_, hd_).transpose(1, 0, 2, 3, 4)
+
+        def one(args):
+            qi, off = args
+            return attention(qi, k, v, causal=causal, window=window,
+                             prefix_len=prefix_len,
+                             q_offset=q_offset + off * q_chunk,
+                             kv_valid_len=kv_valid_len, kv_chunk=kv_chunk,
+                             q_chunk=0)
+
+        out = jax.lax.map(one, (qb, jnp.arange(nq)))
+        return out.transpose(1, 0, 2, 3, 4).reshape(b_, sq_, h_, hd_)
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, hd)
+    rows = q_offset + jnp.arange(sq)                      # (Sq,) global rows
+
+    kv_chunk = min(kv_chunk, sk)
+    n_chunks = -(-sk // kv_chunk)
+    pad = n_chunks * kv_chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, n_chunks, kv_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    if kv_valid_len is None:
+        valid_len = jnp.full((1,), sk, jnp.int32)
+    else:
+        valid_len = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)
+
+    def body(carry, inputs):
+        m_i, l_i, acc = carry
+        ci, kci, vci = inputs
+        cols = ci * kv_chunk + jnp.arange(kv_chunk)       # (C,) global cols
+        # (B, Sq, Hkv, G, C)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg, kci.astype(jnp.float32))
+
+        mask = cols[None, None, :] < valid_len[:, None, None]   # (B?,1,C)
+        mask = jnp.broadcast_to(mask, (max(b, mask.shape[0]), sq, kv_chunk))
+        if causal:
+            cm = (cols[None, :] <= rows[:, None])[None]          # (1,Sq,C)
+            if prefix_len is not None:
+                pl = jnp.asarray(prefix_len, jnp.int32).reshape(-1, 1, 1)
+                cm = cm | (cols[None, None, :] < pl)
+            mask = mask & cm
+        if window > 0:
+            mask = mask & (cols[None, None, :] > rows[None, :, None] - window)
+
+        s = jnp.where(mask[:, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bqhgc,bchd->bqhgd", p, vci.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, sq, hkv, g), _NEG_INF, jnp.float32),
+            jnp.zeros((b, sq, hkv, g), jnp.float32),
+            jnp.zeros((b, sq, hkv, g, hd), jnp.float32))
+    (_m, l_f, acc), _ = jax.lax.scan(body, init,
+                                     (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

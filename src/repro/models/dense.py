@@ -1,0 +1,341 @@
+"""Dense decoder-only transformer family.
+
+Covers qwen2.5 (QKV bias), mistral-large, stablelm (partial rotary),
+gemma3 (5:1 local:global sliding-window pattern), and — with an image-prefix
+projector + prefix-LM mask — paligemma.
+
+Layers are stacked and scanned as *pattern groups*: the repeating window
+pattern (e.g. gemma's (W,W,W,W,W,0)) forms one macro-layer whose params carry
+a leading n_groups axis; the remainder layers form a second short scan. This
+keeps windows static (no cond-in-scan double compute) while preserving exact
+layer order and compact HLO.
+
+Caches: global layers cache (B, S, Hkv, Dh); sliding-window layers cache a
+ring buffer of size `window` (softmax is permutation-invariant, and RoPE is
+applied pre-cache, so ring order is harmless) — this is what makes the
+long_500k decode cell fit for gemma3."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import (Params, apply_rope, attn_params, dense_init,
+                                 dtype_of, embed_init, mlp_params, rmsnorm,
+                                 split_keys, stack_params, stacked_axes, swiglu)
+from repro.sharding.context import bshard
+
+
+# -- layer pattern -------------------------------------------------------------
+
+
+def layer_pattern(cfg: ModelConfig) -> Tuple[Tuple[int, ...], int, Tuple[int, ...]]:
+    """(group_pattern, n_groups, remainder_pattern) of per-layer windows."""
+    if cfg.local_global_ratio > 0:
+        pat = (cfg.sliding_window,) * cfg.local_global_ratio + (0,)
+    elif cfg.sliding_window > 0:
+        pat = (cfg.sliding_window,)
+    else:
+        pat = (0,)
+    n_groups = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_groups * len(pat)
+    if cfg.local_global_ratio > 0:
+        rem_pat = (cfg.sliding_window,) * rem
+    else:
+        rem_pat = (0,) * rem if pat == (0,) else (cfg.sliding_window,) * rem
+    return pat, n_groups, rem_pat
+
+
+# -- params ---------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> Tuple[Params, Params]:
+    k1, k2 = split_keys(key, 2)
+    attn_p, attn_ax = attn_params(k1, cfg, dtype)
+    mlp_p, mlp_ax = mlp_params(k2, cfg.d_model, cfg.d_ff, dtype)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_p,
+        "mlp": mlp_p,
+    }
+    ax = {
+        "attn_norm": ("embed",),
+        "mlp_norm": ("embed",),
+        "attn": attn_ax,
+        "mlp": mlp_ax,
+    }
+    return p, ax
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    dtype = dtype_of(cfg.dtype)
+    pat, n_groups, rem = layer_pattern(cfg)
+    keys = split_keys(key, 4 + cfg.n_layers)
+    vp = cfg.vocab_padded
+
+    params: Params = {
+        "embed": embed_init(keys[0], (vp, cfg.d_model), dtype),
+        "unembed": dense_init(keys[1], (cfg.d_model, vp), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    axes: Params = {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+    }
+
+    li = iter(keys[4:])
+    if n_groups > 0:
+        groups = []
+        for _g in range(n_groups):
+            subs = {}
+            for si in range(len(pat)):
+                p, ax_l = _layer_init(next(li), cfg, dtype)
+                subs[f"sub{si}"] = p
+            groups.append(subs)
+        params["groups"] = stack_params(groups)
+        axes["groups"] = {f"sub{si}": stacked_axes(ax_l)
+                          for si in range(len(pat))}
+    for ri in range(len(rem)):
+        p, ax_l = _layer_init(next(li), cfg, dtype)
+        params[f"rem{ri}"] = p
+        axes[f"rem{ri}"] = ax_l
+
+    if cfg.n_img_tokens:  # paligemma projector (stub frontend → d_model)
+        params["img_proj"] = dense_init(keys[2], (1152, cfg.d_model), dtype)
+        axes["img_proj"] = (None, "embed")
+    return params, axes
+
+
+# -- forward --------------------------------------------------------------------
+
+
+def _block(x, p, cfg: ModelConfig, window: int, positions, prefix_len,
+           kv_chunk: int):
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv_rope(h, p["attn"], cfg, positions)
+    o = attention(q, k, v, causal=True, window=window, prefix_len=prefix_len,
+                  kv_chunk=kv_chunk)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(o.shape[0], o.shape[1], -1),
+                   p["attn"]["wo"])
+    x = x + o
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h, **p["mlp"])
+    return bshard(x)
+
+
+def _qkv_rope(h, ap, cfg: ModelConfig, positions):
+    from repro.models.layers import qkv
+    q, k, v = qkv(h, ap, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    return q, k, v
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig, *,
+            img_embed: Optional[jax.Array] = None,
+            kv_chunk: int = 1024) -> jax.Array:
+    """→ final hidden states (B, S[, +N_img], D)."""
+    x = bshard(jnp.take(params["embed"], tokens, axis=0))
+    prefix_len = None
+    if cfg.n_img_tokens and img_embed is not None:
+        img = jnp.einsum("bnv,vd->bnd", img_embed.astype(x.dtype),
+                         params["img_proj"])
+        x = jnp.concatenate([img, x], axis=1)
+        prefix_len = jnp.int32(cfg.n_img_tokens)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    pat, n_groups, rem = layer_pattern(cfg)
+
+    if n_groups > 0:
+        def group_body(xc, gp):
+            for si, win in enumerate(pat):
+                xc = _block(xc, gp[f"sub{si}"], cfg, win, positions, prefix_len,
+                            kv_chunk)
+            return xc, None
+
+        body = _maybe_remat(group_body, cfg)
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    for ri, win in enumerate(rem):
+        x = _block(x, params[f"rem{ri}"], cfg, win, positions, prefix_len,
+                   kv_chunk)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+         kv_chunk: int = 1024) -> jax.Array:
+    tokens = batch["tokens"]
+    x = forward(params, tokens, cfg, img_embed=batch.get("img_embed"),
+                kv_chunk=kv_chunk)
+    if cfg.n_img_tokens:
+        x = x[:, cfg.n_img_tokens:]
+    from repro.models.layers import chunked_ce
+    return chunked_ce(x, params["unembed"], batch["targets"])
+
+
+# -- serving (cache) ---------------------------------------------------------------
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    """KV caches: ring buffer of size `window` for sliding-window layers."""
+    pat, n_groups, rem = layer_pattern(cfg)
+    dtype = dtype_of(cfg.dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def one(win):
+        s = min(win, seq) if win > 0 else seq
+        return {"k": jnp.zeros((batch, s, hkv, hd), dtype),
+                "v": jnp.zeros((batch, s, hkv, hd), dtype)}
+
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if n_groups > 0:
+        cache["groups"] = {
+            f"sub{si}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one(w))
+            for si, w in enumerate(pat)}
+    for ri, w in enumerate(rem):
+        cache[f"rem{ri}"] = one(w)
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    pat, n_groups, rem = layer_pattern(cfg)
+    kv_ax = {"k": ("batch", None, "kv_heads_c", "head_dim_c"),
+             "v": ("batch", None, "kv_heads_c", "head_dim_c")}
+    ax: Params = {"pos": ()}
+    if n_groups > 0:
+        ax["groups"] = {f"sub{si}": jax.tree.map(
+            lambda t: ("layer",) + t, kv_ax, is_leaf=lambda t: isinstance(t, tuple))
+            for si in range(len(pat))}
+    for ri in range(len(rem)):
+        ax[f"rem{ri}"] = kv_ax
+    return ax
+
+
+def _block_decode(x, p, kvc, cfg: ModelConfig, window: int, pos, kv_chunk: int):
+    """One-token decode through one layer; returns (x, new kv)."""
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv_rope(h, p["attn"], cfg, pos[None])
+    s_cache = kvc["k"].shape[1]
+    if window > 0:
+        slot = pos % s_cache                      # ring buffer
+    else:
+        slot = jnp.minimum(pos, s_cache - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(kvc["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(kvc["v"], v, slot, axis=1)
+    valid = jnp.minimum(pos + 1, s_cache)
+    o = attention(q, ck, cv, causal=False, kv_valid_len=valid,
+                  kv_chunk=kv_chunk)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(o.shape[0], 1, -1), p["attn"]["wo"])
+    x = x + o
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    x = bshard(x + swiglu(h, **p["mlp"]))
+    return x, {"k": ck, "v": cv}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            kv_chunk: int = 1024, max_len: int = 0):
+    """Full-sequence forward that also fills the caches. Global-attention
+    caches are padded to `max_len` (≥ S + decode budget); sliding-window
+    layers keep a `window`-sized ring regardless."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    prefix_len = None
+    if cfg.n_img_tokens and batch.get("img_embed") is not None:
+        img = jnp.einsum("bnv,vd->bnd", batch["img_embed"].astype(x.dtype),
+                         params["img_proj"])
+        x = jnp.concatenate([img, x], axis=1)
+        prefix_len = jnp.int32(cfg.n_img_tokens)
+        s = x.shape[1]
+    positions = jnp.arange(s)
+    pat, n_groups, rem = layer_pattern(cfg)
+    cache = {"pos": jnp.asarray(s, jnp.int32)}
+
+    def fill_block(xc, p, win):
+        h = rmsnorm(xc, p["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv_rope(h, p["attn"], cfg, positions)
+        o = attention(q, k, v, causal=True, window=win, prefix_len=prefix_len,
+                      kv_chunk=kv_chunk)
+        o = jnp.einsum("bsh,hd->bsd", o.reshape(o.shape[0], o.shape[1], -1),
+                       p["attn"]["wo"])
+        xc = xc + o
+        h = rmsnorm(xc, p["mlp_norm"], cfg.norm_eps)
+        xc = bshard(xc + swiglu(h, **p["mlp"]))
+        if win > 0:  # keep the last `win` positions, ring-aligned (slot = pos % win)
+            wlen = min(win, s)
+            k = jax.lax.dynamic_slice_in_dim(k, s - wlen, wlen, axis=1)
+            v = jax.lax.dynamic_slice_in_dim(v, s - wlen, wlen, axis=1)
+            if wlen == win:
+                k = jnp.roll(k, shift=s % win, axis=1)
+                v = jnp.roll(v, shift=s % win, axis=1)
+            else:  # wlen < win ⇒ pos p already sits at slot p; pad ring
+                k = jnp.pad(k, ((0, 0), (0, win - wlen), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, win - wlen), (0, 0), (0, 0)))
+        elif max_len > s:  # room for subsequent decode steps
+            k = jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+        return xc, {"k": k, "v": v}
+
+    if n_groups > 0:
+        def group_body(xc, gp):
+            kvs = {}
+            for si, win in enumerate(pat):
+                xc, kv_ = fill_block(xc, gp[f"sub{si}"], win)
+                kvs[f"sub{si}"] = kv_
+            return xc, kvs
+
+        x, gkvs = jax.lax.scan(group_body, x, params["groups"])
+        cache["groups"] = gkvs
+    for ri, win in enumerate(rem):
+        x, kv_ = fill_block(x, params[f"rem{ri}"], win)
+        cache[f"rem{ri}"] = kv_
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig, kv_chunk: int = 2048):
+    """One-token decode. batch = {"token": (B,) int32}."""
+    tok = batch["token"]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)
+    pat, n_groups, rem = layer_pattern(cfg)
+    new_cache: Params = {"pos": pos + 1}
+
+    if n_groups > 0:
+        def group_body(xc, scanned):
+            gp, gkv = scanned
+            kvs = {}
+            for si, win in enumerate(pat):
+                xc, kv_ = _block_decode(xc, gp[f"sub{si}"], gkv[f"sub{si}"],
+                                        cfg, win, pos, kv_chunk)
+                kvs[f"sub{si}"] = kv_
+            return xc, kvs
+
+        x, gkvs = jax.lax.scan(group_body, x, (params["groups"], cache["groups"]))
+        new_cache["groups"] = gkvs
+    for ri, win in enumerate(rem):
+        x, kv_ = _block_decode(x, params[f"rem{ri}"], cache[f"rem{ri}"], cfg,
+                               win, pos, kv_chunk)
+        new_cache[f"rem{ri}"] = kv_
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["unembed"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,244 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The speech frontend is a STUB per the assignment: `input_specs()` provides
+precomputed audio-frame embeddings (B, S//4, 1280); a learned linear
+projector maps them to d_model. Encoder = bidirectional self-attention;
+decoder = causal self-attention + cross-attention to the encoder output.
+Decode serving caches both the self KV and the (computed-once) cross KV."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention
+from repro.models.config import ModelConfig
+from repro.sharding.context import bshard
+from repro.models.layers import (Params, apply_rope, attn_params, dense_init,
+                                 dtype_of, embed_init, mlp_params, qkv, rmsnorm,
+                                 split_keys, stack_params, stacked_axes, swiglu)
+
+AUDIO_FEAT = 1280
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = split_keys(key, 2)
+    ap, aax = attn_params(k1, cfg, dtype)
+    mp, max_ = mlp_params(k2, cfg.d_model, cfg.d_ff, dtype)
+    p = {"attn_norm": jnp.ones((cfg.d_model,), dtype),
+         "mlp_norm": jnp.ones((cfg.d_model,), dtype), "attn": ap, "mlp": mp}
+    ax = {"attn_norm": ("embed",), "mlp_norm": ("embed",), "attn": aax,
+          "mlp": max_}
+    return p, ax
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    ap, aax = attn_params(k1, cfg, dtype)
+    cp, cax = attn_params(k2, cfg, dtype, cross=True)
+    mp, max_ = mlp_params(k3, cfg.d_model, cfg.d_ff, dtype)
+    p = {"attn_norm": jnp.ones((cfg.d_model,), dtype),
+         "cross_norm": jnp.ones((cfg.d_model,), dtype),
+         "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+         "attn": ap, "cross": cp, "mlp": mp}
+    ax = {"attn_norm": ("embed",), "cross_norm": ("embed",),
+          "mlp_norm": ("embed",), "attn": aax, "cross": cax, "mlp": max_}
+    return p, ax
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    dtype = dtype_of(cfg.dtype)
+    keys = split_keys(key, 4 + cfg.n_enc_layers + cfg.n_layers)
+    vp = cfg.vocab_padded
+    enc, eax = [], None
+    for i in range(cfg.n_enc_layers):
+        p, eax = _enc_layer_init(keys[4 + i], cfg, dtype)
+        enc.append(p)
+    dec, dax = [], None
+    for i in range(cfg.n_layers):
+        p, dax = _dec_layer_init(keys[4 + cfg.n_enc_layers + i], cfg, dtype)
+        dec.append(p)
+    params = {
+        "audio_proj": dense_init(keys[0], (AUDIO_FEAT, cfg.d_model), dtype),
+        "embed": embed_init(keys[1], (vp, cfg.d_model), dtype),
+        "unembed": dense_init(keys[2], (cfg.d_model, vp), dtype),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "enc_layers": stack_params(enc),
+        "dec_layers": stack_params(dec),
+    }
+    axes = {
+        "audio_proj": (None, "embed"),
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "enc_norm": ("embed",),
+        "final_norm": ("embed",),
+        "enc_layers": stacked_axes(eax),
+        "dec_layers": stacked_axes(dax),
+    }
+    return params, axes
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           kv_chunk: int = 1024) -> jax.Array:
+    x = jnp.einsum("bsa,ad->bsd", frames.astype(dtype_of(cfg.dtype)),
+                   params["audio_proj"])
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, lp):
+        h = rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = qkv(h, lp["attn"], cfg)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attention(q, k, v, causal=False, kv_chunk=kv_chunk)
+        xc = xc + jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
+                             lp["attn"]["wo"])
+        h = rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+        return bshard(xc + swiglu(h, **lp["mlp"])), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(x, lp, enc_out, cfg, positions, kv_chunk):
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = qkv(h, lp["attn"], cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
+                       lp["attn"]["wo"])
+    h = rmsnorm(x, lp["cross_norm"], cfg.norm_eps)
+    qc = jnp.einsum("bsd,dh->bsh", h, lp["cross"]["wq"]).reshape(
+        *h.shape[:2], cfg.n_heads, cfg.hd)
+    kc = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wk"]).reshape(
+        enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+    vc = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wv"]).reshape(
+        enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+    oc = attention(qc, kc, vc, causal=False, kv_chunk=kv_chunk)
+    x = x + jnp.einsum("bsh,hd->bsd", oc.reshape(*oc.shape[:2], -1),
+                       lp["cross"]["wo"])
+    h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    return bshard(x + swiglu(h, **lp["mlp"]))
+
+
+def loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+         kv_chunk: int = 1024) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg, kv_chunk)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(xc, lp):
+        return _dec_block(xc, lp, enc_out, cfg, positions, kv_chunk), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    from repro.models.layers import chunked_ce
+    return chunked_ce(x, params["unembed"], batch["targets"])
+
+
+# -- serving -------------------------------------------------------------------
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            kv_chunk: int = 1024, max_len: int = 0):
+    """Encoder pass + decoder prefill. Caches: self KV (padded to max_len) and
+    cross KV computed once from the encoder output."""
+    enc_out = encode(params, batch["frames"], cfg, kv_chunk)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    ml = max(max_len, s)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)
+
+    def body(xc, lp):
+        h = rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = qkv(h, lp["attn"], cfg)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = attention(q, k, v, causal=True, kv_chunk=kv_chunk)
+        xc = xc + jnp.einsum("bsh,hd->bsd", o.reshape(b, s, -1), lp["attn"]["wo"])
+        h = rmsnorm(xc, lp["cross_norm"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dh->bsh", h, lp["cross"]["wq"]).reshape(
+            b, s, cfg.n_heads, cfg.hd)
+        kc = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wk"]).reshape(
+            b, enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        vc = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wv"]).reshape(
+            b, enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        oc = attention(qc, kc, vc, causal=False, kv_chunk=kv_chunk)
+        xc = xc + jnp.einsum("bsh,hd->bsd", oc.reshape(b, s, -1),
+                             lp["cross"]["wo"])
+        h = rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = bshard(xc + swiglu(h, **lp["mlp"]))
+        k = jnp.pad(k, ((0, 0), (0, ml - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, ml - s), (0, 0), (0, 0)))
+        return xc, {"k": k, "v": v, "ck": kc, "cv": vc}
+
+    x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]).astype(jnp.float32)
+    return logits, {"pos": jnp.asarray(s, jnp.int32), **kvs}
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    hkv, hd, nl = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    s_audio = max(seq // cfg.audio_downsample, 1)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((nl, batch, seq, hkv, hd), dtype),
+        "v": jnp.zeros((nl, batch, seq, hkv, hd), dtype),
+        "ck": jnp.zeros((nl, batch, s_audio, hkv, hd), dtype),
+        "cv": jnp.zeros((nl, batch, s_audio, hkv, hd), dtype),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    t = ("layer", "batch", None, "kv_heads_c", "head_dim_c")
+    return {"pos": (), "k": t, "v": t, "ck": t, "cv": t}
+
+
+def decode_step(params: Params, cache: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig, kv_chunk: int = 2048):
+    tok = batch["token"]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)
+    b = x.shape[0]
+    s_cache = cache["k"].shape[2]
+    slot = jnp.minimum(pos, s_cache - 1)
+
+    def body(xc, scanned):
+        lp, ck, cv, xk, xv = scanned
+        h = rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = qkv(h, lp["attn"], cfg)
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, slot, axis=1)
+        o = attention(q, ck, cv, causal=False,
+                      kv_valid_len=jnp.minimum(pos + 1, s_cache),
+                      kv_chunk=kv_chunk)
+        xc = xc + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, -1), lp["attn"]["wo"])
+        h = rmsnorm(xc, lp["cross_norm"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dh->bsh", h, lp["cross"]["wq"]).reshape(
+            b, 1, cfg.n_heads, cfg.hd)
+        oc = attention(qc, xk, xv, causal=False, kv_chunk=kv_chunk)
+        xc = xc + jnp.einsum("bsh,hd->bsd", oc.reshape(b, 1, -1),
+                             lp["cross"]["wo"])
+        h = rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = bshard(xc + swiglu(h, **lp["mlp"]))
+        return xc, {"k": ck, "v": cv}
+
+    x, kvs = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                    cache["v"], cache["ck"], cache["cv"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["unembed"]).astype(jnp.float32)
+    return logits, {"pos": pos + 1, "k": kvs["k"], "v": kvs["v"],
+                    "ck": cache["ck"], "cv": cache["cv"]}

@@ -1,0 +1,191 @@
+"""Shared layer primitives: RMSNorm, RoPE, SwiGLU, initializers, logical axes.
+
+Params are plain nested dicts of jnp arrays; every param tree has a parallel
+"logical axes" tree (tuples of logical axis names) consumed by
+repro.sharding.partitioning to build NamedShardings. Layer stacks carry a
+leading "layer" axis and are scanned (compact HLO — essential for the 512-
+device dry-run compile times)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# -- init helpers -------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis: int = -2):
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# -- norms ---------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rope ----------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0):
+    rot_dim = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    inv, rot_dim = rope_freqs(hd, theta, rotary_pct)
+    if rot_dim == 0:
+        return x
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv  # (S, rd/2) or (B, S, rd/2)
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape[:-1] + (rot_dim,))
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot_dim:]], axis=-1)
+
+
+# -- mlp -----------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def mlp_params(key, d: int, f: int, dtype) -> Tuple[Params, Params]:
+    k1, k2, k3 = split_keys(key, 3)
+    p = {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_down": dense_init(k3, (f, d), dtype),
+    }
+    ax = {
+        "w_gate": ("embed", "ffn"),
+        "w_up": ("embed", "ffn"),
+        "w_down": ("ffn", "embed"),
+    }
+    return p, ax
+
+
+# -- attention projections -------------------------------------------------------
+
+
+def attn_params(key, cfg, dtype, cross: bool = False) -> Tuple[Params, Params]:
+    d, hd = cfg.d_model, cfg.hd
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = split_keys(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, h * hd), dtype),
+        "wk": dense_init(k2, (d, hkv * hd), dtype),
+        "wv": dense_init(k3, (d, hkv * hd), dtype),
+        "wo": dense_init(k4, (h * hd, d), dtype),
+    }
+    ax = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+        ax["bq"] = ("heads",)
+        ax["bk"] = ("kv_heads",)
+        ax["bv"] = ("kv_heads",)
+    return p, ax
+
+
+def qkv(x: jax.Array, p: Params, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    b, s = x.shape[:2]
+    return (q.reshape(b, s, h, hd), k.reshape(b, s, hkv, hd),
+            v.reshape(b, s, hkv, hd))
+
+
+# -- loss ------------------------------------------------------------------------
+
+
+def chunked_ce(x: jax.Array, unembed: jax.Array, targets: jax.Array,
+               seq_chunk: int = 256) -> jax.Array:
+    """Cross-entropy without materializing the full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside a
+    remat'd body (backward recomputes them) — peak activation drops from
+    B·S·V to B·seq_chunk·V. §Perf lever for huge-vocab archs (gemma3 262k)."""
+    b, s, d = x.shape
+    seq_chunk = min(seq_chunk, s)
+    if s % seq_chunk != 0:
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0].mean()
+    nc = s // seq_chunk
+    xc = x.reshape(b, nc, seq_chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, seq_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xi, ti = inp
+        logits = jnp.einsum("bsd,dv->bsv", xi, unembed).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, ti[..., None], axis=-1)[..., 0]
+        return acc + (lse - tgt).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, tc))
+    return total / (b * s)
+
+
+# -- stacking (scan over layers) ----------------------------------------------
+
+
+def stack_params(per_layer: list) -> Params:
+    """List of identical-structure param trees → single tree with leading L."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def stacked_axes(ax: Params) -> Params:
+    return jax.tree.map(lambda t: ("layer",) + t, ax,
+                        is_leaf=lambda t: isinstance(t, tuple))

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) block — chunked state-space dual form.
+
+Per head (state N, head dim P):  h_t = exp(dt_t·A)·h_{t−1} + dt_t·x_t⊗B_t,
+y_t = h_t·C_t + D·x_t. Training uses the chunkwise form (intra-chunk
+quadratic + inter-chunk state passing — maps onto the MXU); decode carries
+(conv window, ssd state) in O(1) per token. A sequential oracle validates
+the chunked form (tests/test_ssm.py)."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (Params, dense_init, dtype_of, rmsnorm,
+                                 split_keys)
+from repro.sharding.context import bshard
+
+
+def ssd_chunked(x, dt, A, B_mat, C_mat, chunk: int = 64, state=None):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,) negative; B_mat/C_mat: (B, S, N).
+    Returns (y (B,S,H,P), state (B,H,P,N))."""
+    b, s, nh, p = x.shape
+    n = B_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B_mat.astype(jnp.float32)
+    Cf = C_mat.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))   # dt=0 ⇒ no decay, no input
+    Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+    Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+
+    def resh(z):
+        return z.reshape(b, nc, chunk, *z.shape[2:]).transpose(
+            1, 0, *range(2, z.ndim + 1))
+
+    xc, dtc, Bc, Cc = map(resh, (xf, dtf, Bf, Cf))
+    if state is None:
+        state = jnp.zeros((b, nh, p, n), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(h_st, inp):
+        xi, dti, Bi, Ci = inp                      # (B,T,H,P), (B,T,H), (B,T,N)
+        ldec = dti * A                              # (B,T,H) log decay ≤ 0
+        cum = jnp.cumsum(ldec, axis=1)
+        # intra: w_ij = exp(cum_i − cum_j)·dt_j, j ≤ i
+        lw = cum[:, :, None] - cum[:, None, :]      # (B,T_i,T_j,H)
+        w = jnp.where(causal[None, :, :, None], jnp.exp(lw), 0.0) * dti[:, None]
+        cb = jnp.einsum("bin,bjn->bij", Ci, Bi)     # (B,T_i,T_j)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, w, xi)
+        # inter: y_i += exp(cum_i) · (h_st C_i)
+        y_inter = jnp.einsum("bhpn,bin->bihp", h_st, Ci) * jnp.exp(cum)[..., None]
+        # state update
+        tot = cum[:, -1]                            # (B,H)
+        dec_j = jnp.exp(tot[:, None] - cum) * dti   # (B,T,H)
+        h_new = (h_st * jnp.exp(tot)[..., None, None]
+                 + jnp.einsum("bjh,bjhp,bjn->bhpn", dec_j, xi, Bi))
+        return h_new, y_intra + y_inter
+
+    state, ys = jax.lax.scan(body, state, (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, nh, p)
+    return y[:, :s], state
+
+
+def ssd_step(state, x, dt, A, B_vec, C_vec):
+    """One-token step. x: (B,H,P); dt: (B,H); B_vec/C_vec: (B,N)."""
+    xf = x.astype(jnp.float32)
+    dec = jnp.exp(dt * A)                           # (B,H)
+    state = (state * dec[..., None, None]
+             + dt[..., None, None] * (xf[..., :, None] * B_vec[:, None, None, :]))
+    y = jnp.einsum("bhpn,bn->bhp", state, C_vec)
+    return state, y
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state
+    (B, K−1, C))."""
+    k = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(y), new_state
+
+
+def block_init(key, cfg: ModelConfig, dtype) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    conv_ch = di + 2 * n
+    k1, k2, k3 = split_keys(key, 3)
+    p = {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": dense_init(k1, (d, 2 * di + 2 * n + nh), dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.mamba_conv, conv_ch), jnp.float32)
+                   * 0.2).astype(jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),     # A = −exp(A_log) ∈ (−∞,0)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(k3, (di, d), dtype),
+    }
+    ax = {
+        "norm": ("embed",), "in_proj": ("embed", "inner"), "conv_w": (None, "inner"),
+        "A_log": ("mheads",), "D": ("mheads",), "dt_bias": ("mheads",),
+        "gate_norm": ("inner",), "out_proj": ("inner", "embed"),
+    }
+    return p, ax
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt, di, n, nh
+
+
+def apply(x, p, cfg: ModelConfig, chunk: int = 64):
+    """Training/prefill form. x: (B, S, D) → (B, S, D), state."""
+    b, s, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z, xbc, dt_raw, di, n, nh = _split_proj(proj, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"])
+    xs = xbc[..., :di].reshape(b, s, nh, cfg.mamba_headdim)
+    B_mat = xbc[..., di:di + n]
+    C_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs, dt, A, B_mat, C_mat, chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return bshard(x + out), state
+
+
+def make_state(cfg: ModelConfig, batch: int) -> Params:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.mamba_headdim
+    return {
+        "ssd": jnp.zeros((batch, nh, cfg.mamba_headdim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, di + 2 * n), jnp.float32),
+    }
+
+
+def state_axes() -> Params:
+    return {"ssd": ("batch", "mheads", None, None),
+            "conv": ("batch", None, "inner")}
+
+
+def apply_prefill(x, p, cfg: ModelConfig, chunk: int = 64):
+    """Like `apply` but also returns the decode-ready state dict."""
+    b, s, d = x.shape
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z, xbc, dt_raw, di, n, nh = _split_proj(proj, cfg)
+    conv_in = xbc
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"])
+    xs = xbc[..., :di].reshape(b, s, nh, cfg.mamba_headdim)
+    B_mat = xbc[..., di:di + n]
+    C_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssd_state = ssd_chunked(xs, dt, A, B_mat, C_mat, chunk=chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return bshard(x + out), {"ssd": ssd_state, "conv": conv_state.astype(jnp.float32)}
+
+
+def apply_decode(x, p, st, cfg: ModelConfig):
+    """One-token step. x: (B, 1, D)."""
+    b = x.shape[0]
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    z, xbc, dt_raw, di, n, nh = _split_proj(proj, cfg)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], conv_state=st["conv"])
+    xs = xbc[:, 0, :di].reshape(b, nh, cfg.mamba_headdim)
+    B_vec = xbc[:, 0, di:di + n]
+    C_vec = xbc[:, 0, di + n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssd_state, y = ssd_step(st["ssd"], xs, dt, A, B_vec, C_vec)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + out, {"ssd": ssd_state, "conv": conv_state.astype(jnp.float32)}

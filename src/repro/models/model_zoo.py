@@ -1,0 +1,111 @@
+"""Uniform model interface: family dispatch + abstract specs for the dry-run.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no allocation): train batches, prefill
+batches, or (cache + token) decode inputs, per the assigned shape cells.
+Modality frontends are stubs per the assignment: paligemma gets precomputed
+SigLIP patch embeddings, seamless gets precomputed audio-frame embeddings."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, encdec, moe as moe_m, xlstm as xlstm_m, zamba
+from repro.models.config import ModelConfig, ShapeConfig
+
+VISION_FEAT = 1152   # SigLIP width (paligemma stub)
+AUDIO_FEAT = encdec.AUDIO_FEAT
+
+
+def _family(cfg: ModelConfig):
+    return {
+        "dense": dense, "vlm": dense,
+        "moe": moe_m,
+        "encdec": encdec,
+        "xlstm": xlstm_m,
+        "hybrid": zamba,
+    }[cfg.family]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable          # key -> (params, axes)
+    loss: Callable          # (params, batch) -> scalar
+    prefill: Callable       # (params, batch, max_len=0) -> (logits, cache)
+    decode_step: Callable   # (params, cache, batch) -> (logits, cache)
+    make_cache: Callable    # (batch, seq) -> cache
+    cache_axes: Callable    # () -> logical axes tree for the cache
+
+    def abstract_params(self) -> Tuple[Any, Any]:
+        """(ShapeDtypeStruct tree, logical axes tree) — no allocation.
+
+        The axes tree is plain python built during init; we capture it from
+        the abstract trace via a side channel."""
+        box: Dict[str, Any] = {}
+
+        def f(key):
+            p, ax = self.init(key)
+            box["ax"] = ax
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, box["ax"]
+
+    def abstract_cache(self, batch: int, seq: int):
+        return jax.eval_shape(lambda: self.make_cache(batch, seq))
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    fam = _family(cfg)
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: fam.init(key, cfg),
+        loss=lambda p, b: fam.loss(p, b, cfg),
+        prefill=lambda p, b, max_len=0: fam.prefill(p, b, cfg, max_len=max_len),
+        decode_step=lambda p, c, b: fam.decode_step(p, c, b, cfg),
+        make_cache=lambda batch, seq: fam.make_cache(cfg, batch, seq),
+        cache_axes=lambda: fam.cache_axes(cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.mode in ("train", "prefill"):
+        ax: Dict[str, Any] = {"tokens": ("batch", None)}
+        if shape.mode == "train":
+            ax["targets"] = ("batch", None)
+        if cfg.family == "vlm":
+            ax["img_embed"] = ("batch", None, None)
+        if cfg.family == "encdec":
+            ax["frames"] = ("batch", None, None)
+        return ax
+    return {"token": ("batch",)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if shape.mode == "train":
+            batch["targets"] = sds((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            batch["img_embed"] = sds((b, cfg.n_img_tokens, VISION_FEAT),
+                                     jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, max(s // cfg.audio_downsample, 1),
+                                   AUDIO_FEAT), jnp.float32)
+        return batch
+    # decode cells: one new token against a seq_len cache
+    return {"token": sds((b,), jnp.int32)}

@@ -1,0 +1,480 @@
+"""xLSTM (sLSTM + mLSTM blocks) — arXiv:2405.04517.
+
+mLSTM is a matrix-memory linear-attention recurrence with exponential input
+gating and a running stabilizer m_t:
+
+  m_t = max(log f_t + m_{t-1}, log i_t)
+  C_t = exp(log f_t + m_{t-1} − m_t)·C_{t-1} + exp(log i_t − m_t)·k_t v_tᵀ
+  n_t = (same decays on n)                 h_t = (q̂_t·C_t) / max(|q̂_t·n_t|, e^{−m_t})
+
+Training uses the *chunkwise-parallel* form (intra-chunk quadratic + carried
+(C, n, m) state — the standard way these models map onto matrix units);
+decode uses the O(1) recurrent step. A sequential-scan oracle validates the
+chunked form (tests/test_ssm.py).
+
+Block pattern: `slstm_every` gives one sLSTM block per group (e.g. 6 mLSTM +
+1 sLSTM), mirroring the dense family's pattern-scan. sLSTM is inherently
+sequential (scalar memory with recurrent weights) and runs as a time scan."""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.context import bshard, constrain
+from repro.models.layers import (Params, dense_init, dtype_of, embed_init,
+                                 rmsnorm, split_keys, stack_params,
+                                 stacked_axes)
+
+
+# -- mLSTM core ------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, log_f, log_i, chunk: int = 64,
+                  state: Tuple = None):
+    """q,k,v: (B, S, H, Dh); log_f, log_i: (B, S, H). Returns (h, state).
+
+    state = (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H))."""
+    b, s, nh, dh = q.shape
+    q = q.astype(jnp.float32) / (dh ** 0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    log_f = log_f.astype(jnp.float32)
+    log_i = log_i.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    # padding: log_f = 0 (no decay), log_i = -inf (no input) keeps state exact
+    qp, kp, vp = pad_t(q), pad_t(k), pad_t(v)
+    lfp = pad_t(log_f)
+    lip = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(
+            1, 0, *range(2, x.ndim + 1))
+
+    qc, kc, vc, lfc, lic = map(resh, (qp, kp, vp, lfp, lip))
+    # shapes: (nc, B, T, H, ...)
+
+    if state is None:
+        state = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+                 jnp.zeros((b, nh, dh), jnp.float32),
+                 jnp.full((b, nh), -1e30, jnp.float32))
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, inp):
+        c_st, n_st, m_st = carry
+        qi, ki, vi, lf, li = inp                     # (B, T, H, ...)
+        bcum = jnp.cumsum(lf, axis=1)                # b_j inclusive
+        btot = bcum[:, -1]                           # (B, H)
+
+        # m_intra_i = b_i + prefix-max_j≤i (li_j − b_j)
+        g = li - bcum
+        gmax = jax.lax.cummax(g, axis=1)
+        m_intra = bcum + gmax
+        m_i = jnp.maximum(m_st[:, None] + bcum, m_intra)   # (B, T, H)
+
+        # intra-chunk weights: exp(b_i − b_j + li_j − m_i), j ≤ i
+        lw = (bcum[:, :, None] - bcum[:, None, :] + li[:, None, :]
+              - m_i[:, :, None])                     # (B, T_i, T_j, H)
+        w = jnp.where(causal[None, :, :, None], jnp.exp(lw), 0.0)
+
+        score = jnp.einsum("bihd,bjhd->bijh", qi, ki)
+        num_intra = jnp.einsum("bijh,bijh,bjhd->bihd", score, w, vi)
+        den_intra = jnp.einsum("bijh,bjhd,bihd->bih", w, ki, qi)
+
+        s_inter = jnp.exp(m_st[:, None] + bcum - m_i)      # (B, T, H)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qi, c_st) * s_inter[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qi, n_st) * s_inter
+
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+        # state update (= values at i = T)
+        m_new = m_i[:, -1]
+        dec_j = jnp.exp(btot[:, None] - bcum + li - m_new[:, None])  # (B, T, H)
+        c_new = (c_st * jnp.exp(m_st + btot - m_new)[..., None, None]
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", dec_j, ki, vi))
+        n_new = (n_st * jnp.exp(m_st + btot - m_new)[..., None]
+                 + jnp.einsum("bjh,bjhd->bhd", dec_j, ki))
+        return (c_new, n_new, m_new), h
+
+    state, hs = jax.lax.scan(body, state, (qc, kc, vc, lfc, lic))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, nh, dh)
+    return h[:, :s], state
+
+
+def mlstm_recurrent_step(state, q, k, v, log_f, log_i):
+    """One-token step. q,k,v: (B, H, Dh); gates: (B, H). Oracle + decode."""
+    c_st, n_st, m_st = state
+    dh = q.shape[-1]
+    q = q.astype(jnp.float32) / (dh ** 0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + m_st, log_i)
+    df = jnp.exp(log_f + m_st - m_new)
+    di = jnp.exp(log_i - m_new)
+    c_new = df[..., None, None] * c_st + di[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = df[..., None] * n_st + di[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)),
+                      jnp.exp(-m_new))
+    return (c_new, n_new, m_new), num / den[..., None]
+
+
+# -- sLSTM core (sequential, scalar memory with exponential gating) -----------------
+
+
+def slstm_scan(x_gates, r_weights, state=None):
+    """x_gates: (B, S, H, 4, Dh) input preactivations (i, f, z, o);
+    r_weights: (H, 4, Dh, Dh) recurrent block-diagonal weights.
+    Returns (h (B,S,H,Dh), state)."""
+    b, s, nh, _, dh = x_gates.shape
+    if state is None:
+        state = (jnp.zeros((b, nh, dh), jnp.float32),  # c
+                 jnp.zeros((b, nh, dh), jnp.float32),  # n
+                 jnp.zeros((b, nh, dh), jnp.float32),  # h
+                 jnp.zeros((b, nh, dh), jnp.float32))  # m
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hgde->bhge", h, r_weights)
+        pre = xt.astype(jnp.float32) + rec
+        i_t = pre[:, :, 0]
+        f_t = pre[:, :, 1]
+        z_t = jnp.tanh(pre[:, :, 2])
+        o_t = jax.nn.sigmoid(pre[:, :, 3])
+        m_new = jnp.maximum(f_t + m, i_t)           # log-space stabilizer
+        ig = jnp.exp(i_t - m_new)
+        fg = jnp.exp(f_t + m - m_new)
+        c = fg * c + ig * z_t
+        n = fg * n + ig
+        h = o_t * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, x_gates.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), state
+
+
+# -- blocks ---------------------------------------------------------------------
+
+
+def _mlstm_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    nh = cfg.n_heads
+    k1, k2, k3, k4, k5, k6, k7 = split_keys(key, 7)
+    p = {
+        "norm": jnp.ones((d,), dtype),
+        "w_up": dense_init(k1, (d, di), dtype),
+        "w_z": dense_init(k2, (d, di), dtype),
+        "wq": dense_init(k3, (di, di), dtype),
+        "wk": dense_init(k4, (di, di), dtype),
+        "wv": dense_init(k5, (di, di), dtype),
+        "w_gates": dense_init(k6, (d, 2 * nh), dtype),
+        "head_norm": jnp.ones((di,), dtype),
+        "w_down": dense_init(k7, (di, d), dtype),
+    }
+    ax = {
+        "norm": ("embed",), "w_up": ("embed", "inner"), "w_z": ("embed", "inner"),
+        "wq": ("inner_fsdp", "inner"), "wk": ("inner_fsdp", "inner"),
+        "wv": ("inner_fsdp", "inner"),
+        "w_gates": ("embed", None), "head_norm": ("inner",),
+        "w_down": ("inner", "embed"),
+    }
+    return p, ax
+
+
+def _slstm_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    k1, k2, k3 = split_keys(key, 3)
+    p = {
+        "norm": jnp.ones((d,), dtype),
+        "w_in": dense_init(k1, (d, nh * 4 * dh), dtype),
+        "r": dense_init(k2, (nh, 4, dh, dh), jnp.float32),
+        "w_out": dense_init(k3, (d, d), dtype),
+    }
+    ax = {"norm": ("embed",), "w_in": ("embed", "inner"),
+          "r": ("mheads", None, None, None), "w_out": ("embed", "embed_out")}
+    return p, ax
+
+
+def _mlstm_apply(x, p, cfg: ModelConfig, chunk: int, state=None):
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    nh = cfg.n_heads
+    dh = di // nh
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", h, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"])
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"]).reshape(b, s, nh, dh)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"]).reshape(b, s, nh, dh)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"]).reshape(b, s, nh, dh)
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_gates"]).astype(jnp.float32)
+    log_i = gates[..., :nh]
+    log_f = -jax.nn.softplus(-gates[..., nh:])      # log σ(f̃)
+    o, new_state = mlstm_chunked(q, k, v, log_f, log_i, chunk=chunk, state=state)
+    o = o.reshape(b, s, di).astype(x.dtype)
+    o = rmsnorm(o, p["head_norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", o * jax.nn.silu(z), p["w_down"])
+    # batch-only boundary: mLSTM's chunk reshape fights seq-parallel sharding
+    return constrain(x + y, ("batch", None, None)), new_state
+
+
+def _slstm_apply(x, p, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_in"]).reshape(b, s, nh, 4, dh)
+    o, new_state = slstm_scan(gates, p["r"], state=state)
+    y = jnp.einsum("bsd,de->bse", o.reshape(b, s, d).astype(x.dtype),
+                   p["w_out"])
+    return constrain(x + y, ("batch", None, None)), new_state
+
+
+# -- full model -------------------------------------------------------------------
+
+
+def _pattern(cfg: ModelConfig):
+    if cfg.slstm_every > 0:
+        pat = ("m",) * (cfg.slstm_every - 1) + ("s",)
+    else:
+        pat = ("m",)
+    n_groups = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_groups * len(pat)
+    return pat, n_groups, ("m",) * rem
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    dtype = dtype_of(cfg.dtype)
+    pat, n_groups, rem = _pattern(cfg)
+    keys = split_keys(key, 3 + cfg.n_layers)
+    vp = cfg.vocab_padded
+    params = {
+        "embed": embed_init(keys[0], (vp, cfg.d_model), dtype),
+        "unembed": dense_init(keys[1], (cfg.d_model, vp), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    axes = {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+    }
+    ki = iter(keys[3:])
+    if n_groups:
+        groups = []
+        gax = {}
+        for _ in range(n_groups):
+            subs = {}
+            for si, kind in enumerate(pat):
+                fn = _mlstm_block_init if kind == "m" else _slstm_block_init
+                p, ax = fn(next(ki), cfg, dtype)
+                subs[f"sub{si}"] = p
+                gax[f"sub{si}"] = stacked_axes(ax)
+            groups.append(subs)
+        params["groups"] = stack_params(groups)
+        axes["groups"] = gax
+    for ri in range(len(rem)):
+        p, ax = _mlstm_block_init(next(ki), cfg, dtype)
+        params[f"rem{ri}"] = p
+        axes[f"rem{ri}"] = ax
+    return params, axes
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            chunk: int = 64) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pat, n_groups, rem = _pattern(cfg)
+
+    if n_groups:
+        def body(xc, gp):
+            for si, kind in enumerate(pat):
+                if kind == "m":
+                    xc, _ = _mlstm_apply(xc, gp[f"sub{si}"], cfg, chunk)
+                else:
+                    xc, _ = _slstm_apply(xc, gp[f"sub{si}"], cfg)
+            return xc, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    for ri in range(len(rem)):
+        x, _ = _mlstm_apply(x, params[f"rem{ri}"], cfg, chunk)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+         kv_chunk: int = 1024) -> jax.Array:
+    x = forward(params, batch["tokens"], cfg)
+    from repro.models.layers import chunked_ce
+    return chunked_ce(x, params["unembed"], batch["targets"])
+
+
+# -- serving: recurrent state cache (O(1) per token — long_500k native) -------------
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    del seq  # state size is sequence-independent (the SSM advantage)
+    pat, n_groups, rem = _pattern(cfg)
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    nh = cfg.n_heads
+    dh_m = di // nh
+    dh_s = d // nh
+
+    def m_state():
+        return {"c": jnp.zeros((batch, nh, dh_m, dh_m), jnp.float32),
+                "n": jnp.zeros((batch, nh, dh_m), jnp.float32),
+                "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+    def s_state():
+        return {"c": jnp.zeros((batch, nh, dh_s), jnp.float32),
+                "n": jnp.zeros((batch, nh, dh_s), jnp.float32),
+                "h": jnp.zeros((batch, nh, dh_s), jnp.float32),
+                "m": jnp.zeros((batch, nh, dh_s), jnp.float32)}
+
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if n_groups:
+        cache["groups"] = {
+            f"sub{si}": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape),
+                m_state() if kind == "m" else s_state())
+            for si, kind in enumerate(pat)}
+    for ri in range(len(rem)):
+        cache[f"rem{ri}"] = m_state()
+    return cache
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    pat, n_groups, rem = _pattern(cfg)
+    m_ax = {"c": ("batch", "mheads", None, None), "n": ("batch", "mheads", None),
+            "m": ("batch", "mheads")}
+    s_ax = {"c": ("batch", "mheads", None), "n": ("batch", "mheads", None),
+            "h": ("batch", "mheads", None), "m": ("batch", "mheads", None)}
+    ax: Params = {"pos": ()}
+    if n_groups:
+        ax["groups"] = {
+            f"sub{si}": jax.tree.map(lambda t: ("layer",) + t,
+                                     m_ax if kind == "m" else s_ax,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+            for si, kind in enumerate(pat)}
+    for ri in range(len(rem)):
+        ax[f"rem{ri}"] = m_ax
+    return ax
+
+
+def _mlstm_decode(x, p, st, cfg: ModelConfig):
+    b = x.shape[0]
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    nh = cfg.n_heads
+    dh = di // nh
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", h, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"])
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"]).reshape(b, nh, dh)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"]).reshape(b, nh, dh)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"]).reshape(b, nh, dh)
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_gates"]).astype(jnp.float32)[:, 0]
+    log_i = gates[..., :nh]
+    log_f = -jax.nn.softplus(-gates[..., nh:])
+    state = (st["c"], st["n"], st["m"])
+    state, o = mlstm_recurrent_step(state, q, k, v, log_f, log_i)
+    o = o.reshape(b, 1, di).astype(x.dtype)
+    o = rmsnorm(o, p["head_norm"], cfg.norm_eps)
+    y = jnp.einsum("bse,ed->bsd", o * jax.nn.silu(z), p["w_down"])
+    return x + y, {"c": state[0], "n": state[1], "m": state[2]}
+
+
+def _slstm_decode(x, p, st, cfg: ModelConfig):
+    b = x.shape[0]
+    nh = cfg.n_heads
+    d = cfg.d_model
+    dh = d // nh
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_in"]).reshape(b, 1, nh, 4, dh)
+    o, state = slstm_scan(gates, p["r"],
+                          state=(st["c"], st["n"], st["h"], st["m"]))
+    y = jnp.einsum("bsd,de->bse", o.reshape(b, 1, d).astype(x.dtype),
+                   p["w_out"])
+    return x + y, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            kv_chunk: int = 1024, max_len: int = 0, chunk: int = 64):
+    """Run the sequence through, carrying recurrent states into the cache."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pat, n_groups, rem = _pattern(cfg)
+    cache: Params = {"pos": jnp.asarray(s, jnp.int32)}
+
+    if n_groups:
+        def body(xc, gp):
+            sts = {}
+            for si, kind in enumerate(pat):
+                if kind == "m":
+                    xc, st = _mlstm_apply(xc, gp[f"sub{si}"], cfg, chunk)
+                    sts[f"sub{si}"] = {"c": st[0], "n": st[1], "m": st[2]}
+                else:
+                    xc, st = _slstm_apply(xc, gp[f"sub{si}"], cfg)
+                    sts[f"sub{si}"] = {"c": st[0], "n": st[1], "h": st[2],
+                                       "m": st[3]}
+            return xc, sts
+
+        x, gst = jax.lax.scan(body, x, params["groups"])
+        cache["groups"] = gst
+    for ri in range(len(rem)):
+        x, st = _mlstm_apply(x, params[f"rem{ri}"], cfg, chunk)
+        cache[f"rem{ri}"] = {"c": st[0], "n": st[1], "m": st[2]}
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig, kv_chunk: int = 2048):
+    tok = batch["token"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)
+    pat, n_groups, rem = _pattern(cfg)
+    new_cache: Params = {"pos": cache["pos"] + 1}
+
+    if n_groups:
+        def body(xc, scanned):
+            gp, gst = scanned
+            sts = {}
+            for si, kind in enumerate(pat):
+                if kind == "m":
+                    xc, sts[f"sub{si}"] = _mlstm_decode(xc, gp[f"sub{si}"],
+                                                        gst[f"sub{si}"], cfg)
+                else:
+                    xc, sts[f"sub{si}"] = _slstm_decode(xc, gp[f"sub{si}"],
+                                                        gst[f"sub{si}"], cfg)
+            return xc, sts
+
+        x, gst = jax.lax.scan(body, x, (params["groups"], cache["groups"]))
+        new_cache["groups"] = gst
+    for ri in range(len(rem)):
+        x, new_cache[f"rem{ri}"] = _mlstm_decode(x, params[f"rem{ri}"],
+                                                 cache[f"rem{ri}"], cfg)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["unembed"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,216 @@
+"""Zamba2 hybrid (arXiv:2411.15242): Mamba2 backbone + one SHARED
+attention+MLP block applied every `attn_every` Mamba blocks.
+
+The shared block's weights are a single param set reused at every
+application site (Zamba's parameter-efficiency trick); its input is the
+concat of the current hidden state with the original embedding output,
+fused by a 2D→D projection. Each application site keeps its OWN KV cache
+(weights shared, state not)."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2
+from repro.models.attention import attention
+from repro.models.config import ModelConfig
+from repro.sharding.context import bshard
+from repro.models.layers import (Params, apply_rope, attn_params, dense_init,
+                                 dtype_of, embed_init, mlp_params, qkv, rmsnorm,
+                                 split_keys, stack_params, stacked_axes)
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    k = cfg.attn_every or cfg.n_layers
+    assert cfg.n_layers % k == 0, "zamba: n_layers must divide by attn_every"
+    return cfg.n_layers // k
+
+
+def init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    dtype = dtype_of(cfg.dtype)
+    k = cfg.attn_every or cfg.n_layers
+    ng = _n_groups(cfg)
+    keys = split_keys(key, 6 + cfg.n_layers)
+    vp = cfg.vocab_padded
+
+    blocks, bax = [], None
+    for i in range(cfg.n_layers):
+        p, bax = mamba2.block_init(keys[6 + i], cfg, dtype)
+        blocks.append(p)
+    # stack as (ng, k) macro groups
+    grouped = [dict((f"m{j}", blocks[g * k + j]) for j in range(k))
+               for g in range(ng)]
+
+    ap, aax = attn_params(keys[1], cfg, dtype)
+    mp, max_ = mlp_params(keys[2], cfg.d_model, cfg.d_ff, dtype)
+    params = {
+        "embed": embed_init(keys[0], (vp, cfg.d_model), dtype),
+        "unembed": dense_init(keys[3], (cfg.d_model, vp), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "groups": stack_params(grouped),
+        "shared": {
+            "fuse": dense_init(keys[4], (2 * cfg.d_model, cfg.d_model), dtype),
+            "attn_norm": jnp.ones((cfg.d_model,), dtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+            "attn": ap,
+            "mlp": mp,
+            "out": dense_init(keys[5], (cfg.d_model, cfg.d_model), dtype),
+        },
+    }
+    axes = {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+        "groups": {f"m{j}": stacked_axes(bax) for j in range(k)},
+        "shared": {
+            "fuse": ("embed", "embed_out"),
+            "attn_norm": ("embed",), "mlp_norm": ("embed",),
+            "attn": aax, "mlp": max_, "out": ("embed", "embed_out"),
+        },
+    }
+    return params, axes
+
+
+def _shared_apply(x, x0, sp, cfg: ModelConfig, positions, kv_chunk):
+    h = jnp.concatenate([x, x0], axis=-1)
+    h = jnp.einsum("bsd,de->bse", h, sp["fuse"])
+    a = rmsnorm(h, sp["attn_norm"], cfg.norm_eps)
+    q, kk, vv = qkv(a, sp["attn"], cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    kk = apply_rope(kk, positions, cfg.rope_theta)
+    o = attention(q, kk, vv, causal=True, kv_chunk=kv_chunk)
+    h = h + jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
+                       sp["attn"]["wo"])
+    m = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
+    from repro.models.layers import swiglu
+    h = h + swiglu(m, **sp["mlp"])
+    return bshard(x + jnp.einsum("bsd,de->bse", h, sp["out"])), (kk, vv)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            kv_chunk: int = 1024, chunk: int = 64) -> jax.Array:
+    k = cfg.attn_every or cfg.n_layers
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x0 = x
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(xc, gp):
+        for j in range(k):
+            xc, _ = mamba2.apply(xc, gp[f"m{j}"], cfg, chunk=chunk)
+        xc, _ = _shared_apply(xc, x0, params["shared"], cfg, positions, kv_chunk)
+        return xc, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+         kv_chunk: int = 1024) -> jax.Array:
+    x = forward(params, batch["tokens"], cfg, kv_chunk)
+    from repro.models.layers import chunked_ce
+    return chunked_ce(x, params["unembed"], batch["targets"])
+
+
+# -- serving -----------------------------------------------------------------------
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    k = cfg.attn_every or cfg.n_layers
+    ng = _n_groups(cfg)
+    dtype = dtype_of(cfg.dtype)
+    st = mamba2.make_state(cfg, batch)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "mamba": {f"m{j}": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (ng,) + a.shape), st)
+            for j in range(k)},
+        "attn_k": jnp.zeros((ng, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "attn_v": jnp.zeros((ng, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    k = cfg.attn_every or cfg.n_layers
+    st_ax = jax.tree.map(lambda t: ("layer",) + t, mamba2.state_axes(),
+                         is_leaf=lambda t: isinstance(t, tuple))
+    t = ("layer", "batch", None, "kv_heads_c", "head_dim_c")
+    return {"pos": (), "mamba": {f"m{j}": st_ax for j in range(k)},
+            "attn_k": t, "attn_v": t}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            kv_chunk: int = 1024, max_len: int = 0, chunk: int = 64):
+    k = cfg.attn_every or cfg.n_layers
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    ml = max(max_len, s)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x0 = x
+    positions = jnp.arange(s)
+
+    def body(xc, gp):
+        sts = {}
+        for j in range(k):
+            xc, st = mamba2.apply_prefill(xc, gp[f"m{j}"], cfg, chunk=chunk)
+            sts[f"m{j}"] = st
+        xc, (kk, vv) = _shared_apply(xc, x0, params["shared"], cfg, positions,
+                                     kv_chunk)
+        kk = jnp.pad(kk, ((0, 0), (0, ml - s), (0, 0), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, ml - s), (0, 0), (0, 0)))
+        return xc, (sts, kk, vv)
+
+    x, (msts, ks, vs) = jax.lax.scan(body, x, params["groups"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]).astype(jnp.float32)
+    cache = {"pos": jnp.asarray(s, jnp.int32), "mamba": msts,
+             "attn_k": ks, "attn_v": vs}
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig, kv_chunk: int = 2048):
+    k = cfg.attn_every or cfg.n_layers
+    tok = batch["token"]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tok[:, None], axis=0)
+    x0 = x
+    b = x.shape[0]
+    s_cache = cache["attn_k"].shape[2]
+    slot = jnp.minimum(pos, s_cache - 1)
+    sp = params["shared"]
+
+    def body(xc, scanned):
+        gp, gst, ck, cv = scanned
+        sts = {}
+        for j in range(k):
+            xc, sts[f"m{j}"] = mamba2.apply_decode(xc, gp[f"m{j}"],
+                                                   gst[f"m{j}"], cfg)
+        h = jnp.concatenate([xc, x0], axis=-1)
+        h = jnp.einsum("bsd,de->bse", h, sp["fuse"])
+        a = rmsnorm(h, sp["attn_norm"], cfg.norm_eps)
+        q, kk, vv = qkv(a, sp["attn"], cfg)
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        kk = apply_rope(kk, pos[None], cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, kk, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, vv, slot, axis=1)
+        o = attention(q, ck, cv, causal=False,
+                      kv_valid_len=jnp.minimum(pos + 1, s_cache),
+                      kv_chunk=kv_chunk)
+        h = h + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, -1), sp["attn"]["wo"])
+        m = rmsnorm(h, sp["mlp_norm"], cfg.norm_eps)
+        from repro.models.layers import swiglu
+        h = h + swiglu(m, **sp["mlp"])
+        xc = xc + jnp.einsum("bsd,de->bse", h, sp["out"])
+        return xc, (sts, ck, cv)
+
+    x, (msts, ks, vs) = jax.lax.scan(
+        body, x, (params["groups"], cache["mamba"], cache["attn_k"],
+                  cache["attn_v"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], params["unembed"]).astype(jnp.float32)
+    return logits, {"pos": pos + 1, "mamba": msts, "attn_k": ks, "attn_v": vs}

@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill tier + decode tier.
+
+Two-tier disaggregation (DESIGN.md §4 — the framework-level transfer of the
+paper's cloud/client split): prefill is throughput-bound and batched per
+request group; decode is latency-bound and runs a fixed-batch step with slot
+recycling. On a multi-pod mesh the two tiers live on different pods; here
+both run on the same devices but through the same interfaces."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import ModelBundle
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Static-batch continuous decoding over `slots` concurrent requests."""
+
+    def __init__(self, model: ModelBundle, slots: int, max_len: int,
+                 greedy: bool = True):
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.params: Optional[dict] = None
+        self._decode = jax.jit(lambda p, c, b: model.decode_step(p, c, b))
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+
+    def load(self, seed: int = 0):
+        self.params, _ = self.model.init(jax.random.PRNGKey(seed))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        """Drain the queue: per-request prefill (the throughput tier would
+        batch these), then lockstep batched decode with slot recycling."""
+        finished: List[Request] = []
+        while self.queue or self.active:
+            # fill free slots
+            while self.queue and len(self.active) < self.slots:
+                req = self.queue.pop(0)
+                self.active[req.rid] = req
+            finished.extend(self._decode_round())
+        return finished
+
+    def _decode_round(self) -> List[Request]:
+        reqs = list(self.active.values())
+        # per-request prefill → merge caches batch-wise is engine machinery;
+        # for clarity each round re-prefills the batch (batch = slot count)
+        b = len(reqs)
+        max_prompt = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, -len(r.prompt):] = r.prompt  # left-pad
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)},
+            max_len=max_prompt + max(r.max_new for r in reqs))
+        for _ in range(max(r.max_new for r in reqs)):
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for i, r in enumerate(reqs):
+                if not r.done and len(r.out) < r.max_new:
+                    r.out.append(int(nxt[i]))
+                    if len(r.out) >= r.max_new:
+                        r.done = True
+            if all(r.done for r in reqs):
+                break
+            logits, cache = self._decode(self.params, cache, {"token": nxt})
+        done = [r for r in reqs if r.done]
+        for r in done:
+            del self.active[r.rid]
+        return done

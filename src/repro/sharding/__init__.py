@@ -1,0 +1,4 @@
+from repro.sharding.context import (activation_rules, constrain,
+                                    current_rules, use_rules)
+from repro.sharding.partitioning import (logical_to_pspec, make_shardings,
+                                         LOGICAL_RULES)

@@ -1,0 +1,97 @@
+"""Ambient sharding context: models stay mesh-agnostic.
+
+Model code calls `constrain(x, ("batch", None, "embed_act"))` with *logical*
+axis names; under a launcher-installed context (mesh + rules) this becomes a
+with_sharding_constraint, otherwise it is a no-op — so smoke tests and
+single-device runs need no plumbing."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Optional[Dict[str, Tuple[str, ...]]]] = (
+    contextvars.ContextVar("logical_axis_rules", default=None))
+
+
+def activation_rules(mesh, seq_parallel: bool = True
+                     ) -> Dict[str, Tuple[str, ...]]:
+    """Logical → mesh axes for ACTIVATIONS (weights: partitioning.py).
+
+    `mesh` may be a Mesh or a tuple of axis names (sizes then unknown and
+    divisibility is not enforced). seq_parallel shards block-boundary
+    activations' seq dim over `model` — Megatron-SP style; this is what keeps
+    the saved scan carries (one residual per layer) within HBM for the big
+    train cells (§Perf iteration log)."""
+    if hasattr(mesh, "axis_names"):
+        names = tuple(mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    else:
+        names = tuple(mesh)
+        sizes = {}
+    has_pod = "pod" in names
+    batch = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        "batch": batch,
+        "experts": ("model",),
+        "expert_cap": batch,
+        "expert_groups": batch,
+        "heads_act": ("model",),
+        "embed_act": (),          # replicated activations along features
+        "ffn_act": ("model",),
+        "vocab_act": ("model",),
+        "seq_act": ("model",) if seq_parallel else (),
+        "__sizes__": sizes,
+    }
+    return rules
+
+
+def current_rules():
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, Tuple[str, ...]]):
+    token = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def bshard(x: jax.Array) -> jax.Array:
+    """Constrain block-boundary activations: batch over the data axes and —
+    for (B, S, D) activations — seq over `model` (sequence parallelism: saved
+    residuals shrink by the TP degree; attention/k-v re-gathers inside the
+    block). Indivisible dims silently fall back to replicated."""
+    if x.ndim >= 3:
+        return constrain(x, ("batch", "seq_act") + (None,) * (x.ndim - 2))
+    return constrain(x, ("batch",) + (None,) * (x.ndim - 1))
+
+
+def constrain(x: jax.Array, logical: Tuple[Optional[str], ...]) -> jax.Array:
+    """Apply a sharding constraint if a context is active (else no-op).
+    Axes that do not divide the corresponding dim are dropped."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sizes = rules.get("__sizes__", {})
+    spec = []
+    for i, name in enumerate(logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()))
+        if axes and sizes:
+            div = 1
+            for a in axes:
+                div *= sizes.get(a, 1)
+            if div and x.shape[i] % div != 0:
+                spec.append(None)
+                continue
+        spec.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

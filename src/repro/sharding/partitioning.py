@@ -1,0 +1,81 @@
+"""Weight/cache sharding rules: logical axis names → mesh PartitionSpecs.
+
+Strategy (MaxText-class):
+  * FSDP: weight `embed` dims shard over the `data` axis;
+  * TP: heads / ffn / vocab / experts dims shard over the `model` axis;
+  * KV caches shard batch over (`pod`,`data`) and head_dim over `model`
+    (head_dim is divisible by 16 for every assigned arch; head COUNTS often
+    are not — e.g. qwen2.5 has 2 kv heads);
+  * the `pod` axis is pure DP for weights (gradients all-reduce across pods).
+
+`make_shardings` checks divisibility per-dimension and falls back to
+replication for any axis that does not divide — so one rule table serves all
+ten architectures."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weight-side logical rules (activations: context.activation_rules)
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "layer": (),
+    "embed": ("data",),       # FSDP
+    "heads": ("model",),      # fused H*hd dim
+    "kv_heads": ("model",),   # fused Hkv*hd dim
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),      # ssm / xlstm d_inner
+    "inner_fsdp": ("data",),  # input dim of square inner projections
+    "embed_out": ("model",),  # output dim of square d→d projections
+    "ssm_state": (),
+    "mheads": ("model",),
+    # cache / activation logical names that appear in cache axes trees
+    "batch": ("pod", "data"),
+    "kv_heads_c": (),
+    "head_dim_c": ("model",),
+}
+
+
+def logical_to_pspec(logical: Tuple[Optional[str], ...], mesh: Mesh,
+                     shape: Optional[Tuple[int, ...]] = None,
+                     rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> P:
+    rules = rules or LOGICAL_RULES
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for i, name in enumerate(logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ()) if a in names)
+        if not axes:
+            spec.append(None)
+            continue
+        if shape is not None:
+            div = int(np.prod([sizes[a] for a in axes]))
+            if shape[i] % div != 0:
+                spec.append(None)  # indivisible → replicate this dim
+                continue
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def make_shardings(mesh: Mesh, abstract: Any, axes_tree: Any,
+                   rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Tree of NamedShardings matching `abstract` (ShapeDtypeStructs)."""
+
+    def one(leaf, ax):
+        if ax is None:
+            ax = ()
+        ax = tuple(ax) + (None,) * (len(leaf.shape) - len(ax))
+        return NamedSharding(mesh, logical_to_pspec(ax[: len(leaf.shape)], mesh,
+                                                    leaf.shape, rules))
+
+    # abstract's treedef drives the map; axes_tree is flattened *up to* it, so
+    # tuple-of-names leaves in axes_tree are passed whole.
+    return jax.tree.map(one, abstract, axes_tree)

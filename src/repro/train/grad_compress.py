@@ -1,0 +1,55 @@
+"""int8 gradient compression with error feedback.
+
+This is the framework-level transfer of the paper's Δ-streaming idea (send
+only what matters, quantized, with state that keeps both sides consistent —
+DESIGN.md §4): per-tensor symmetric int8 quantization before the cross-pod
+gradient reduction, with the quantization residual fed back into the next
+step (error feedback preserves convergence). On a real fleet the int8
+payload crosses DCN between pods; in-pod reductions stay bf16/fp32."""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q, scale)."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_ef(grads: Any, error: Any) -> Tuple[Any, Any, jax.Array]:
+    """Quantize (grads + carried error); return (dequantized grads that the
+    optimizer consumes, new error, mean relative quantization error)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress(gf)
+        deq = decompress(q, s)
+        return deq, gf - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    num = sum(jnp.sum(jnp.abs(e)) for e in jax.tree.leaves(new_err))
+    den = sum(jnp.sum(jnp.abs(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)) + 1e-12
+    return deq, new_err, num / den
+
+
+def wire_bytes(grads: Any) -> int:
+    """int8 payload size (vs 4 bytes fp32 / 2 bytes bf16)."""
+    return sum(int(jnp.size(g)) for g in jax.tree.leaves(grads)) + \
+        8 * len(jax.tree.leaves(grads))

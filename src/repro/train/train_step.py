@@ -1,0 +1,57 @@
+"""Jitted train/serve steps with full sharding annotations.
+
+`make_train_step` builds the donated, sharded step used by both the real
+trainer and the 512-device dry-run: in_shardings come from the logical-axis
+trees, activations are constrained via the ambient rules context."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelBundle
+from repro.sharding.context import activation_rules, use_rules
+from repro.train import grad_compress, optimizer as opt
+
+
+def make_loss_fn(model: ModelBundle):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(model: ModelBundle, ocfg: opt.OptimizerConfig,
+                    compress_grads: bool = False):
+    """(params, opt_state[, grad_error], batch) → (params, opt_state[, err],
+    metrics). Pure; jit/shard outside."""
+
+    def step(params, opt_state, grad_error, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if compress_grads:
+            grads, grad_error, qerr = grad_compress.compress_grads_ef(
+                grads, grad_error)
+        else:
+            qerr = jnp.float32(0.0)
+        params, opt_state, metrics = opt.apply_updates(params, grads,
+                                                       opt_state, ocfg)
+        metrics = dict(metrics, loss=loss, quant_err=qerr)
+        return params, opt_state, grad_error, metrics
+
+    return step
+
+
+def make_serve_step(model: ModelBundle, mode: str):
+    """decode: (params, cache, batch) → (logits, cache);
+    prefill: (params, batch) → (logits, cache)."""
+    if mode == "decode":
+        def step(params, cache, batch):
+            return model.decode_step(params, cache, batch)
+        return step
+    if mode == "prefill":
+        def step(params, batch):
+            return model.prefill(params, batch)
+        return step
+    raise ValueError(mode)

@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device (multi-device tests
+spawn subprocesses; see tests/multihost_utils.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core.gaussians import CityConfig, generate_city, random_gaussians
+from repro.core.lod_tree import build_lod_tree
+
+
+@pytest.fixture(scope="session")
+def small_city():
+    return generate_city(CityConfig(blocks_x=2, blocks_y=2, leaf_density=0.15, seed=1))
+
+
+@pytest.fixture(scope="session")
+def small_tree(small_city):
+    return build_lod_tree(small_city, target_subtrees=16, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_tree():
+    rng = np.random.default_rng(7)
+    leaves = random_gaussians(rng, 150, sh_degree=1, extent=30.0)
+    return build_lod_tree(leaves, branching=(2, 4), target_subtrees=8, seed=1)

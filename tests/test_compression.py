@@ -1,0 +1,72 @@
+"""Δcut codec: roundtrip bounds, VQ correctness, wire-size accounting."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as comp
+from repro.core.gaussians import random_gaussians
+
+
+@pytest.fixture(scope="module")
+def scene():
+    rng = np.random.default_rng(0)
+    return random_gaussians(rng, 4096, sh_degree=2, extent=100.0)
+
+
+@pytest.fixture(scope="module")
+def codec(scene):
+    return comp.fit_codec(scene, k_codes=256, iters=6, seed=0)
+
+
+def test_roundtrip_geometry_bounds(scene, codec):
+    out = comp.roundtrip(codec, scene)
+    pos_err = np.abs(np.asarray(out.mu - scene.mu))
+    rng = np.asarray(codec.pos_hi - codec.pos_lo)
+    assert (pos_err <= rng / 65535.0).all()  # within 1 LSB
+    ls_err = np.abs(np.asarray(out.log_scale - scene.log_scale))
+    srange = float(codec.scale_hi - codec.scale_lo)
+    assert (ls_err <= srange / 65535.0 + 1e-6).all()
+    op_err = np.abs(np.asarray(out.opacity - scene.opacity))
+    assert (op_err <= 1.5 / 65535.0).all()
+    # quaternions stay unit and close
+    qn = np.linalg.norm(np.asarray(out.quat), axis=1)
+    np.testing.assert_allclose(qn, 1.0, atol=1e-3)
+
+
+def test_dc_color_preserved(scene, codec):
+    out = comp.roundtrip(codec, scene)
+    # DC band is fp16 — relative error ~1e-3
+    np.testing.assert_allclose(np.asarray(out.sh[:, 0, :]),
+                               np.asarray(scene.sh[:, 0, :]), rtol=2e-3, atol=2e-3)
+
+
+def test_vq_reduces_ac_error_vs_zero(scene, codec):
+    """The codebook must beat the trivial all-zeros quantizer on AC energy."""
+    out = comp.roundtrip(codec, scene)
+    ac = np.asarray(scene.sh[:, 1:, :])
+    err_vq = np.mean((np.asarray(out.sh[:, 1:, :]) - ac) ** 2)
+    err_zero = np.mean(ac ** 2)
+    assert err_vq < 0.7 * err_zero
+
+
+def test_vq_assign_is_nearest(codec):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(512, codec.codebook.shape[1])).astype(np.float32))
+    idx = comp.vq_assign_ref(x, codec.codebook)
+    d = np.linalg.norm(np.asarray(x)[:, None, :] - np.asarray(codec.codebook)[None], axis=-1)
+    np.testing.assert_array_equal(np.asarray(idx), d.argmin(1))
+
+
+def test_wire_bytes(codec):
+    bpg = comp.wire_bytes_per_gaussian(codec)
+    # dc 6 + code 1 (256 codes) + pos 6 + scale 6 + quat 8 + opa 2
+    assert bpg == 6 + 1 + 6 + 6 + 8 + 2
+
+
+def test_sh_degree0_roundtrip():
+    rng = np.random.default_rng(2)
+    g = random_gaussians(rng, 128, sh_degree=0)
+    codec = comp.fit_codec(g, k_codes=16, iters=2)
+    out = comp.roundtrip(codec, g)
+    assert out.sh.shape == g.sh.shape

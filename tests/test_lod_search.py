@@ -1,0 +1,130 @@
+"""Streaming + temporal-aware LoD search: bit-accuracy vs the numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lod_search as ls
+
+FOCAL = 1400.0
+
+
+def _run_full(tree, cam, tau):
+    cut, state = ls.full_search(tree, np.asarray(cam, np.float32),
+                                jnp.float32(FOCAL), jnp.float32(tau))
+    return np.asarray(cut.mask(tree)), state
+
+
+@pytest.mark.parametrize("tau", [2.0, 16.0, 64.0, 256.0])
+@pytest.mark.parametrize("cam", [[20, 20, 1.7], [300, 300, 150], [-100, 50, 30]])
+def test_full_search_matches_oracle(small_tree, tau, cam):
+    got, _ = _run_full(small_tree, cam, tau)
+    ref = ls.reference_search_np(small_tree, np.asarray(cam, np.float32), FOCAL, tau)
+    assert (got == ref).all()
+
+
+def test_cut_is_antichain_and_maximal(small_tree):
+    """No cut node is an ancestor of another; every root-leaf path crosses the
+    cut exactly once (fundamental property of an LoD cut)."""
+    cam = np.array([250, 250, 120], np.float32)
+    got, _ = _run_full(small_tree, cam, 64.0)
+    parent = ls.global_parent_np(small_tree)
+    valid = np.asarray(small_tree.valid_mask())
+    # walk up from every cut node: no ancestor may be in the cut
+    idxs = np.where(got)[0]
+    for i in idxs[:: max(1, len(idxs) // 64)]:
+        p = parent[i]
+        while p >= 0:
+            assert not got[p]
+            p = parent[p]
+    # walk up from every leaf: exactly one cut crossing
+    level = ls.global_level_np(small_tree)
+    is_leaf = np.concatenate([
+        np.asarray(small_tree.top_is_leaf),
+        np.asarray(small_tree.slab_is_leaf).reshape(-1)])
+    leaves = np.where(is_leaf & valid)[0]
+    for i in leaves[:: max(1, len(leaves) // 64)]:
+        crossings, p = int(got[i]), parent[i]
+        while p >= 0:
+            crossings += int(got[p])
+            p = parent[p]
+        assert crossings == 1
+
+
+def test_temporal_bit_accurate_walk(small_tree):
+    rng = np.random.default_rng(0)
+    cam = np.array([20, 20, 1.7], np.float32)
+    _, state = _run_full(small_tree, cam, 24.0)
+    for _ in range(25):
+        cam = cam + rng.normal(0, 0.05, 3).astype(np.float32)
+        cut, state = ls.temporal_search(small_tree, state, cam,
+                                        jnp.float32(FOCAL), jnp.float32(24.0))
+        ref = ls.reference_search_np(small_tree, cam, FOCAL, 24.0)
+        assert (np.asarray(cut.mask(small_tree)) == ref).all()
+
+
+def test_temporal_bit_accurate_flyout(small_tree):
+    """Fly from street level to altitude — crosses LoD boundaries, forcing
+    resweeps; accuracy must hold on the resweep path too."""
+    cam = np.array([40, 40, 2], np.float32)
+    cut, state = ls.full_search(small_tree, cam, jnp.float32(FOCAL), jnp.float32(64.0))
+    total_resweeps = 0
+    for _ in range(40):
+        cam = cam + np.array([4, 4, 60], np.float32)
+        cut, state = ls.temporal_search(small_tree, state, cam,
+                                        jnp.float32(FOCAL), jnp.float32(64.0))
+        ref = ls.reference_search_np(small_tree, cam, FOCAL, 64.0)
+        assert (np.asarray(cut.mask(small_tree)) == ref).all()
+        total_resweeps += int(np.asarray(cut.resweep).sum())
+    assert total_resweeps > 0  # the reuse bound must actually have been crossed
+
+
+def test_hybrid_matches_jit_variant(small_tree):
+    rng = np.random.default_rng(1)
+    cam = np.array([30, 30, 2], np.float32)
+    _, s1 = _run_full(small_tree, cam, 48.0)
+    _, s2 = _run_full(small_tree, cam, 48.0)
+    for _ in range(12):
+        cam = cam + rng.normal(0, 8.0, 3).astype(np.float32)
+        c1, s1 = ls.temporal_search(small_tree, s1, cam,
+                                    jnp.float32(FOCAL), jnp.float32(48.0))
+        c2, s2 = ls.temporal_search_hybrid(small_tree, s2, cam, FOCAL, 48.0)
+        assert (np.asarray(c1.mask(small_tree)) == np.asarray(c2.mask(small_tree))).all()
+
+
+def test_nodes_touched_monotonicity(small_tree):
+    """Temporal search must touch no more nodes than the full sweep."""
+    cam = np.array([20, 20, 1.7], np.float32)
+    cut_full, state = ls.full_search(small_tree, cam, jnp.float32(FOCAL),
+                                     jnp.float32(24.0))
+    cut_t, _ = ls.temporal_search(small_tree, state, cam + 0.01,
+                                  jnp.float32(FOCAL), jnp.float32(24.0))
+    assert int(cut_t.nodes_touched) <= int(cut_full.nodes_touched)
+
+
+def test_cut_gids_compaction(small_tree):
+    cam = np.array([250, 250, 120], np.float32)
+    cut, _ = ls.full_search(small_tree, cam, jnp.float32(FOCAL), jnp.float32(64.0))
+    n = int(cut.count())
+    gids, count, overflow = ls.cut_gids(cut, small_tree, budget=n + 8)
+    assert int(count) == n and not bool(overflow)
+    g = np.asarray(gids)
+    assert (g[:n] >= 0).all() and (g[n:] == -1).all()
+    assert (np.diff(g[:n]) > 0).all()  # sorted unique
+    mask = np.asarray(cut.mask(small_tree))
+    assert mask[g[:n]].all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tau=st.floats(4.0, 512.0),
+    x=st.floats(-200.0, 400.0),
+    y=st.floats(-200.0, 400.0),
+    z=st.floats(1.0, 500.0),
+)
+def test_property_full_search_matches_oracle(tiny_tree, tau, x, y, z):
+    cam = np.array([x, y, z], np.float32)
+    cut, _ = ls.full_search(tiny_tree, cam, jnp.float32(FOCAL), jnp.float32(tau))
+    ref = ls.reference_search_np(tiny_tree, cam, FOCAL, tau)
+    assert (np.asarray(cut.mask(tiny_tree)) == ref).all()

@@ -1,0 +1,84 @@
+"""Sharding rules + a scaled-down multi-device dry-run in a subprocess
+(8 fake devices — the production path at toy scale; the conftest process must
+keep seeing the single real device)."""
+
+import json
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models.model_zoo import get_model
+from repro.sharding.partitioning import logical_to_pspec, make_shardings
+
+
+def _fake_mesh():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_logical_to_pspec_divisibility_fallback():
+    mesh = _fake_mesh()
+    # size-1 axes always divide
+    assert logical_to_pspec(("embed", "heads"), mesh, (64, 64)) == P("data", "model")
+
+
+def test_make_shardings_cover_all_archs():
+    mesh = _fake_mesh()
+    for name in sorted(ARCHS):
+        model = get_model(ARCHS[name])
+        shapes, axes = model.abstract_params()
+        sh = make_shardings(mesh, shapes, axes)
+        assert jax.tree.structure(sh) == jax.tree.structure(shapes)
+        # caches too
+        cache = model.abstract_cache(2, 64)
+        csh = make_shardings(mesh, cache, model.cache_axes())
+        assert jax.tree.structure(csh) == jax.tree.structure(cache)
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_mesh
+from repro.launch.hlo_analysis import analyze
+import repro.launch.dryrun as dr
+import repro.configs as C
+from repro.models.config import reduced, ShapeConfig, SHAPES
+import repro.models.config as mc
+
+# shrink: tiny configs + tiny shapes, 2x4 and 2x2x2 meshes
+mc.SHAPES = (ShapeConfig("train_4k", 64, 8, "train"),
+             ShapeConfig("decode_32k", 128, 8, "decode"))
+C.ARCHS = {k: reduced(v) for k, v in C.ARCHS.items()}
+
+results = {}
+for mesh in [make_mesh((2, 4), ("data", "model")),
+             make_mesh((2, 2, 2), ("pod", "data", "model"))]:
+    for arch in ["qwen2.5-3b", "granite-moe-1b-a400m", "zamba2-2.7b"]:
+        for shape in ["train_4k", "decode_32k"]:
+            lowered, meta = lower_cell(arch, shape, mesh)
+            compiled = lowered.compile()
+            ana = analyze(compiled.as_text())
+            key = f"{arch}|{shape}|{len(mesh.devices.shape)}"
+            results[key] = dict(flops=ana["flops"], ok=True)
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_multi_device_dryrun_subprocess():
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], capture_output=True,
+                         text=True, timeout=600, cwd=".")
+    assert out.returncode == 0, out.stderr[-3000:]
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    assert len(results) == 12
+    assert all(v["ok"] for v in results.values())
+    assert all(v["flops"] > 0 for v in results.values())
