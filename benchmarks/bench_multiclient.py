@@ -1,0 +1,79 @@
+"""Multi-client LoD serving: per-client cost as the fleet grows.
+
+Sweeps B ∈ {1, 4, 16, 64} concurrent headsets on staggered copies of one
+city walk (a "tour group": heavy temporal+spatial correlation, the regime
+the cloud actually serves) and reports, per client: downlink sync bytes,
+LoD-search nodes touched, and the pooled scheduler's sweep pool occupancy.
+The headline: with cross-client pooling, cloud work scales with TOTAL fleet
+staleness (stale slab pairs), not with B — the multi-user analog of the
+paper's temporal-reuse figures."""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import city_scene, emit, rigs_along_walk
+from repro.core.pipeline import SessionConfig
+from repro.serve import lod_service as svc
+
+FOCAL, TAU = 260.0, 48.0
+SYNCS = 24
+BATCHES = (1, 4, 16, 64)
+
+
+def _fleet_walk(n_clients: int, syncs: int) -> np.ndarray:
+    """(syncs, B, 3) — client b follows the shared walk b steps behind."""
+    rigs = rigs_along_walk(syncs + n_clients, extent=(200.0, 200.0),
+                           focal=FOCAL)
+    poses = np.stack([np.asarray(r.left.pos, np.float32) for r in rigs])
+    return np.stack([poses[f + np.arange(n_clients)] for f in range(syncs)])
+
+
+def run():
+    _cfg, _leaves, tree = city_scene("medium")
+    m = tree.meta
+    cfg = SessionConfig(tau=TAU, cut_budget=16384)
+    emit("multiclient/scene", 0.0,
+         f"nodes={m.n_real} subtrees={m.Ns} slab={m.S}")
+
+    for b in BATCHES:
+        walks = _fleet_walk(b, SYNCS)
+        service = svc.LodService(tree, cfg, b, focal=FOCAL, mode="pooled")
+        # warm-up sync (full sweep for every client) + jit compilation
+        t0 = time.perf_counter()
+        first = service.sync(walks[0])
+        t_first = time.perf_counter() - t0
+
+        times, per_bytes, per_nodes, per_resweeps = [], [], [], []
+        for f in range(1, SYNCS):
+            t0 = time.perf_counter()
+            stats = service.sync(walks[f])
+            times.append(time.perf_counter() - t0)
+            per_bytes.append(np.asarray(stats.sync_bytes))
+            per_nodes.append(np.asarray(stats.nodes_touched))
+            per_resweeps.append(np.asarray(stats.resweeps))
+
+        per_bytes = np.stack(per_bytes)       # (syncs-1, B)
+        per_nodes = np.stack(per_nodes)
+        pool = np.stack(per_resweeps).sum(axis=1)  # stale pairs per sync
+        steady = per_bytes[2:]
+        emit(f"multiclient/b{b}/sync_us_per_client",
+             float(np.median(times) * 1e6 / b),
+             f"fleet_sync={np.median(times)*1e6:.0f}us "
+             f"t_first={t_first*1e3:.0f}ms")
+        emit(f"multiclient/b{b}/sync_bytes_per_client", 0.0,
+             f"first={np.asarray(first.sync_bytes).mean()/1024:.1f}KiB "
+             f"steady={steady.mean()/1024:.2f}KiB")
+        emit(f"multiclient/b{b}/nodes_touched_per_client", 0.0,
+             f"mean={per_nodes.mean():.0f} of {m.T + m.Ns * m.S} "
+             f"({per_nodes.mean()/(m.T + m.Ns*m.S)*100:.1f}%)")
+        emit(f"multiclient/b{b}/pool", 0.0,
+             f"stale_pairs/sync={pool.mean():.1f} of {b * m.Ns} "
+             f"({pool.mean()/(b*m.Ns)*100:.1f}%)")
+    emit("multiclient/summary", 0.0,
+         "pooled scheduler: sweep work follows total fleet staleness, "
+         "not client count")
+
+
+if __name__ == "__main__":
+    run()

@@ -8,6 +8,7 @@ import traceback
 MODULES = [
     "benchmarks.bench_memory",       # Figs. 2/6
     "benchmarks.bench_lod_search",   # Figs. 7/20
+    "benchmarks.bench_multiclient",  # multi-user cloud serving (ROADMAP)
     "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24
     "benchmarks.bench_stereo",       # Figs. 8/21
     "benchmarks.bench_quality",      # Figs. 16/17(quality)

@@ -1,0 +1,78 @@
+"""Batched multi-client cloud session (the paper's Fig. 9 cloud, B headsets).
+
+One shared city tree + codec serves a fleet of head-tracked clients: the
+per-sync temporal LoD search is vmapped across clients and the stale-subtree
+sweeps of all clients are pooled into one bucketed dispatch
+(repro.serve.lod_service). Prints a per-client accounting table and the
+fleet-level bandwidth vs per-user H.265 video streaming.
+
+    PYTHONPATH=src python examples/multi_client_session.py [--clients 8]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.camera import TrajectoryConfig, walk_trajectory
+from repro.core.gaussians import CityConfig, generate_city
+from repro.core.lod_tree import build_lod_tree
+from repro.core.pipeline import SessionConfig
+from repro.core.video_model import (StreamConfig, nebula_bandwidth_bps,
+                                    video_bandwidth_bps)
+from repro.serve.lod_service import LodService
+
+FOCAL = 260.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--syncs", type=int, default=24)
+    args = ap.parse_args()
+    b = args.clients
+
+    leaves = generate_city(CityConfig(blocks_x=4, blocks_y=4, leaf_density=0.25))
+    tree = build_lod_tree(leaves, target_subtrees=64)
+    print(f"scene: {tree.meta.n_real} nodes, {tree.meta.Ns} subtrees; "
+          f"{b} clients")
+
+    # every client walks the same city on its own seed
+    walks = []
+    for c in range(b):
+        cams = walk_trajectory(TrajectoryConfig(seed=c), args.syncs,
+                               (200.0, 200.0), focal_px=FOCAL,
+                               width=160, height=96)
+        walks.append(np.stack([np.asarray(cam.pos, np.float32)
+                               for cam in cams]))
+    walks = np.stack(walks, axis=1)  # (syncs, B, 3)
+
+    cfg = SessionConfig(tau=48.0, w=4, w_star=32, cut_budget=16384)
+    service = LodService(tree, cfg, b, focal=FOCAL, mode="pooled")
+
+    total_bytes = np.zeros(b)
+    for f in range(args.syncs):
+        stats = service.sync(walks[f])
+        total_bytes += np.asarray(stats.sync_bytes)
+        if f < 4 or f % 8 == 0:
+            sb = np.asarray(stats.sync_bytes)
+            print(f"sync {f:3d}: pool={int(np.asarray(stats.resweeps).sum()):4d}"
+                  f"/{b * tree.meta.Ns} slabs  "
+                  f"bytes/client med={np.median(sb)/1024:7.1f}KiB "
+                  f"max={sb.max()/1024:7.1f}KiB  "
+                  f"cut med={int(np.median(np.asarray(stats.cut_size)))}")
+
+    print("\nper-client totals over the session:")
+    for c in range(b):
+        print(f"  client {c}: {total_bytes[c]/1024:8.1f} KiB "
+              f"({total_bytes[c]/args.syncs/1024:6.2f} KiB/sync)")
+
+    per_sync = total_bytes.mean() / args.syncs
+    nb = nebula_bandwidth_bps(per_sync, cfg.w, 90.0)
+    video = video_bandwidth_bps(StreamConfig())
+    print(f"\nfleet mean bandwidth/client: nebula {nb/1e6:.1f} Mbps vs "
+          f"H.265@VR {video/1e6:.0f} Mbps → {nb/video*100:.1f}% "
+          f"(×{b} clients served from one tree)")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,15 @@ class TemporalState:
             swept=jnp.zeros((Ns,), bool),
         )
 
+    @staticmethod
+    def initial_batched(Ns: int, S: int, B: int) -> "TemporalState":
+        """B independent clients' states stacked on a leading batch axis.
+        (`swept=False` everywhere, so every client's first search is a full
+        sweep — identical to `full_search`.)"""
+        base = TemporalState.initial(Ns, S)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (B,) + a.shape), base)
+
 
 # ---------------------------------------------------------------------------
 # sweeps
@@ -230,6 +239,35 @@ def temporal_search(tree: LodTree, state: TemporalState, cam_pos: jax.Array,
     return cut, new_state
 
 
+# -- batched multi-client search (leading batch axis = clients) --------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batched_temporal_search(tree: LodTree, states: TemporalState,
+                            cam_positions: jax.Array, focal: jax.Array,
+                            tau: jax.Array) -> Tuple[CutResult, TemporalState]:
+    """`temporal_search` vmapped over B clients sharing one tree.
+
+    states' leaves carry a leading (B, ...) axis (see
+    `TemporalState.initial_batched`); cam_positions is (B, 3). Returns a
+    CutResult / TemporalState whose leaves are batched the same way — each
+    client's slice is bit-identical to a sequential per-client
+    `temporal_search`. Shared-tree reads are broadcast, so the whole batch is
+    one fused device program."""
+    cam_positions = jnp.asarray(cam_positions, jnp.float32)
+    return jax.vmap(temporal_search, in_axes=(None, 0, 0, None, None))(
+        tree, states, cam_positions, focal, tau)
+
+
+def batched_cut_mask(cut: CutResult, tree: LodTree) -> jax.Array:
+    """(B, N_pad) global cut masks from a batched CutResult.
+
+    (`CutResult.mask` flattens all axes of slab_cut and is only correct for
+    the unbatched case.)"""
+    b = cut.top_cut.shape[0]
+    return jnp.concatenate([cut.top_cut, cut.slab_cut.reshape(b, -1)], axis=1)
+
+
 # -- host-driven variant (real wall-clock savings) ---------------------------
 
 
@@ -249,6 +287,36 @@ def _top_and_staleness(tree: LodTree, state: TemporalState, cam_pos, focal, tau)
     moved = jnp.linalg.norm(cam_pos - state.cam0, axis=-1)
     stale = (~state.swept) | (moved >= state.rho) | (rpe != state.parent_expand0)
     return top_cut, rpe, stale
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batched_top_and_staleness(tree: LodTree, states: TemporalState,
+                              cam_positions: jax.Array, focal, tau):
+    """Per-client cheap phase of the hybrid search: exact top-tree sweep +
+    per-subtree staleness predicate, vmapped over B clients.
+
+    Returns (top_cut (B,T), rpe (B,Ns), stale (B,Ns)). The expensive phase —
+    sweeping only the stale (client, slab) pairs — is host-scheduled across
+    clients by repro.serve.lod_service."""
+    cam_positions = jnp.asarray(cam_positions, jnp.float32)
+    return jax.vmap(_top_and_staleness, in_axes=(None, 0, 0, None, None))(
+        tree, states, cam_positions, focal, tau)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def sweep_slab_camera_pairs(slab_mu, slab_size, slab_parent, slab_level,
+                            slab_is_leaf, slab_valid, rpe_sel, cam_sel,
+                            focal, tau, max_depth: int):
+    """Sweep K (slab, camera) pairs in one vmapped program.
+
+    Unlike `_sweep_selected` (one shared camera), every pair carries its own
+    camera position — the primitive behind the cross-client pooled scheduler,
+    where stale slabs of *different* clients share one bucketed dispatch.
+    Returns (in_cut (K,S), root_expand (K,), rho (K,))."""
+    fn = functools.partial(_slab_sweep_one, focal=focal, tau=tau,
+                           max_depth=max_depth)
+    return jax.vmap(fn)(slab_mu, slab_size, slab_parent, slab_level,
+                        slab_is_leaf, slab_valid, rpe_sel, cam_sel)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))

@@ -138,6 +138,34 @@ def gather_payload(tree_gaussians, delta_mask: jax.Array, budget: int):
 
 
 # ---------------------------------------------------------------------------
+# batched multi-client tables
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def batched_cloud_sync(states: ManagerState, cut_masks: jax.Array,
+                       ts: jax.Array, w_star: jax.Array
+                       ) -> Tuple[ManagerState, SyncPlan]:
+    """`cloud_sync` vmapped over B clients (one table per headset, one shared
+    tree). `states` leaves are (B, N); cut_masks (B, N); ts (B,). The reuse
+    window is shared. Returns batched (ManagerState, SyncPlan) — each client's
+    slice is bit-identical to a sequential per-client `cloud_sync`."""
+    return jax.vmap(cloud_sync, in_axes=(0, 0, 0, None))(
+        states, cut_masks, ts, w_star)
+
+
+def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float) -> jax.Array:
+    """(B,) per-client downlink bytes for a batched SyncPlan.
+
+    (`SyncPlan.wire_bytes` reduces over every axis and is only correct for the
+    unbatched case.)"""
+    ids = (plan.cut_add.sum(axis=1) + plan.cut_remove.sum(axis=1)
+           ).astype(jnp.float32)
+    return (plan.n_delta.astype(jnp.float32) * bytes_per_gaussian
+            + ids * ID_BYTES_DELTA + SYNC_HEADER_BYTES)
+
+
+# ---------------------------------------------------------------------------
 # numpy reference (independent oracle for the property tests)
 # ---------------------------------------------------------------------------
 

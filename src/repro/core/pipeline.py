@@ -7,13 +7,21 @@ Client side (every frame):
   shared stereo preprocessing → left raster → triangulation shift-merge →
   right raster. Only client-side work is on the motion-to-photon path.
 
+The session is a **pure functional core** — `SessionState` is a pytree and
+`cloud_sync_step` / `client_render_step` / `session_step` are pure functions
+(state in, state out) — so one cloud can hold many sessions side by side:
+`repro.serve.lod_service` stacks `SessionState`-style leaves on a leading
+batch axis and vmaps the temporal LoD search across clients.
+`CollaborativeSession` remains as a thin stateful wrapper over the core for
+API compatibility (examples, benchmarks, older tests).
+
 The session also keeps full byte/work accounting so the benchmarks can
 reproduce the paper's bandwidth/speedup figures."""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,92 +65,227 @@ class FrameStats:
     stereo: Optional[object] = None
 
 
+# ---------------------------------------------------------------------------
+# functional core
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SessionState:
+    """Complete per-client session state as a single pytree.
+
+    mgr_state:    cloud-side management table
+    client:       client-side mirror (reconstructed from wire data only)
+    temporal:     per-subtree LoD-search reuse state
+    client_store: client-side decoded attribute store (codec error included)
+    cut_gids:     (cut_budget,) int32 current render queue, -1 padded
+    sync_index:   () int32 — LoD syncs performed so far
+    frame_index:  () int32 — frames stepped so far
+    """
+
+    mgr_state: mgr.ManagerState
+    client: mgr.ClientState
+    temporal: ls.TemporalState
+    client_store: Gaussians
+    cut_gids: jax.Array
+    sync_index: jax.Array
+    frame_index: jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StepStats:
+    """One frame's accounting, as arrays (pytree — safe to vmap/stack)."""
+
+    synced: jax.Array          # () bool
+    cut_size: jax.Array        # () int32
+    delta_size: jax.Array      # () int32
+    sync_bytes: jax.Array      # () float32
+    nodes_touched: jax.Array   # () int32
+    resweeps: jax.Array        # () int32
+    client_resident: jax.Array  # () int32
+
+
+def session_init(tree: LodTree, cfg: SessionConfig) -> SessionState:
+    """Fresh session state. The initial TemporalState has `swept=False`
+    everywhere, so the first `cloud_sync_step` performs a full sweep —
+    bit-identical to `ls.full_search` (no special first-frame case)."""
+    m = tree.meta
+    n = tree.n_pad
+    z = tree.gaussians
+    store = Gaussians(
+        mu=jnp.zeros_like(z.mu), log_scale=jnp.zeros_like(z.log_scale),
+        quat=jnp.zeros_like(z.quat).at[:, 0].set(1.0),
+        opacity=jnp.zeros_like(z.opacity), sh=jnp.zeros_like(z.sh))
+    return SessionState(
+        mgr_state=mgr.ManagerState.initial(n),
+        client=mgr.ClientState.initial(n),
+        temporal=ls.TemporalState.initial(m.Ns, m.S),
+        client_store=store,
+        cut_gids=jnp.full((cfg.cut_budget,), -1, jnp.int32),
+        sync_index=jnp.int32(0),
+        frame_index=jnp.int32(0),
+    )
+
+
+def session_wire_format(tree: LodTree, cfg: SessionConfig
+                        ) -> Tuple[comp.Codec, float]:
+    """(codec, bytes-per-Gaussian) shared by cloud and client. The codec is
+    scene-level — one fit serves every client of the tree."""
+    codec = comp.fit_codec(tree.gaussians, k_codes=cfg.k_codes, iters=6)
+    bytes_per_g = (comp.wire_bytes_per_gaussian(codec)
+                   if cfg.use_compression
+                   else 4 * (3 + 3 + 4 + 1 + 3 * tree.gaussians.sh.shape[1]))
+    return codec, float(bytes_per_g)
+
+
+def cloud_sync_step(tree: LodTree, codec: comp.Codec, cfg: SessionConfig,
+                    state: SessionState, cam_pos, focal,
+                    bytes_per_g: float) -> Tuple[SessionState, StepStats]:
+    """One LoD sync: temporal-aware search → management sync → Δcut payload →
+    client mirror + store update. Pure (composed of jitted pieces)."""
+    cam_pos = jnp.asarray(cam_pos, jnp.float32)
+    cut, temporal = ls.temporal_search(tree, state.temporal, cam_pos,
+                                       jnp.float32(focal), jnp.float32(cfg.tau))
+    mask = cut.mask(tree)
+    t = state.sync_index
+    mgr_state, plan = mgr.cloud_sync(state.mgr_state, mask, t,
+                                     jnp.int32(cfg.w_star))
+    # wire: Δcut payload (compressed) + cut membership deltas
+    ids, n_delta = mgr.gather_payload(tree.gaussians, plan.delta_data,
+                                      cfg.cut_budget)
+    payload = tree.gaussians.slice_rows(jnp.clip(ids, 0))
+    if cfg.use_compression:
+        enc = comp.encode(codec, payload)
+        dec = comp.decode(codec, enc, payload.sh.shape[1])
+    else:
+        dec = payload
+    # client applies the sync
+    client = mgr.client_sync(state.client, plan.delta_data, plan.cut_add,
+                             plan.cut_remove, t, jnp.int32(cfg.w_star))
+    client_store = _apply_payload(state.client_store, ids, dec)
+    gids, count, _overflow = ls.cut_gids(cut, tree, cfg.cut_budget)
+    new_state = SessionState(
+        mgr_state=mgr_state, client=client, temporal=temporal,
+        client_store=client_store, cut_gids=gids,
+        sync_index=t + 1, frame_index=state.frame_index + 1)
+    stats = StepStats(
+        synced=jnp.asarray(True),
+        cut_size=count,
+        delta_size=n_delta,
+        sync_bytes=plan.wire_bytes(bytes_per_g),
+        nodes_touched=cut.nodes_touched,
+        resweeps=cut.resweep.sum().astype(jnp.int32),
+        client_resident=plan.n_resident)
+    return new_state, stats
+
+
+def idle_step(state: SessionState) -> Tuple[SessionState, StepStats]:
+    """A non-sync frame: the client renders its cached cut; the only uplink
+    traffic is the pose."""
+    new_state = dataclasses.replace(state, frame_index=state.frame_index + 1)
+    stats = StepStats(
+        synced=jnp.asarray(False),
+        cut_size=(state.cut_gids >= 0).sum().astype(jnp.int32),
+        delta_size=jnp.int32(0),
+        sync_bytes=jnp.float32(mgr.POSE_UPLINK_BYTES),
+        nodes_touched=jnp.int32(0),
+        resweeps=jnp.int32(0),
+        client_resident=state.client.has.sum().astype(jnp.int32))
+    return new_state, stats
+
+
+def session_step(tree: LodTree, codec: comp.Codec, cfg: SessionConfig,
+                 state: SessionState, cam_pos, focal, bytes_per_g: float
+                 ) -> Tuple[SessionState, StepStats]:
+    """Advance one VR frame (host-driven sync cadence: every cfg.w frames)."""
+    if int(state.frame_index) % cfg.w == 0:
+        return cloud_sync_step(tree, codec, cfg, state, cam_pos, focal,
+                               bytes_per_g)
+    return idle_step(state)
+
+
+def client_render_step(cfg: SessionConfig, state: SessionState,
+                       rig: StereoRig):
+    """Render the client's current queue from its *decoded* store (pure)."""
+    gids = state.cut_gids
+    queue = state.client_store.slice_rows(jnp.clip(gids, 0))
+    # mask out padding rows by zero opacity
+    queue = dataclasses.replace(
+        queue, opacity=jnp.where(gids >= 0, queue.opacity, 0.0))
+    return render_stereo(queue, rig, tile=cfg.tile, list_len=cfg.list_len,
+                         max_pairs=cfg.max_pairs)
+
+
+def _apply_payload(store: Gaussians, ids: jax.Array, dec: Gaussians
+                   ) -> Gaussians:
+    """Scatter decoded Δcut rows into the client store (-1 ids are padding)."""
+    valid = (ids >= 0)[:, None]
+    safe_ids = jnp.clip(ids, 0)
+    return Gaussians(
+        mu=store.mu.at[safe_ids].set(jnp.where(valid, dec.mu, store.mu[safe_ids])),
+        log_scale=store.log_scale.at[safe_ids].set(
+            jnp.where(valid, dec.log_scale, store.log_scale[safe_ids])),
+        quat=store.quat.at[safe_ids].set(
+            jnp.where(valid, dec.quat, store.quat[safe_ids])),
+        opacity=store.opacity.at[safe_ids].set(
+            jnp.where(valid[:, 0], dec.opacity, store.opacity[safe_ids])),
+        sh=store.sh.at[safe_ids].set(
+            jnp.where(valid[:, :, None], dec.sh, store.sh[safe_ids])),
+    )
+
+
+# ---------------------------------------------------------------------------
+# stateful wrapper (API compatibility)
+# ---------------------------------------------------------------------------
+
+
 class CollaborativeSession:
-    """Host-level driver pairing a cloud state machine with a client mirror."""
+    """Thin stateful wrapper over the functional core (single client)."""
 
     def __init__(self, tree: LodTree, cfg: SessionConfig, rig_template: StereoRig):
         self.tree = tree
         self.cfg = cfg
-        self.codec = comp.fit_codec(tree.gaussians, k_codes=cfg.k_codes, iters=6)
-        self.bytes_per_g = (comp.wire_bytes_per_gaussian(self.codec)
-                            if cfg.use_compression
-                            else 4 * (3 + 3 + 4 + 1 + 3 * tree.gaussians.sh.shape[1]))
-        n = tree.n_pad
-        self.mgr_state = mgr.ManagerState.initial(n)
-        self.client = mgr.ClientState.initial(n)
-        self.temporal: Optional[ls.TemporalState] = None
-        # client-side attribute store (decoded values — quality includes codec)
-        z = tree.gaussians
-        self.client_store = Gaussians(
-            mu=jnp.zeros_like(z.mu), log_scale=jnp.zeros_like(z.log_scale),
-            quat=jnp.zeros_like(z.quat).at[:, 0].set(1.0),
-            opacity=jnp.zeros_like(z.opacity), sh=jnp.zeros_like(z.sh))
+        self.codec, self.bytes_per_g = session_wire_format(tree, cfg)
         self.rig_template = rig_template
-        self.sync_index = 0
-        self.frame_index = 0
-        self.current_cut_ids: Optional[jax.Array] = None
+        self.state = session_init(tree, cfg)
 
-    # -- cloud ---------------------------------------------------------------
+    # legacy attribute views ---------------------------------------------------
 
-    def _lod_search(self, cam_pos) -> ls.CutResult:
-        focal = jnp.float32(self.rig_template.left.focal)
-        tau = jnp.float32(self.cfg.tau)
-        if self.temporal is None:
-            cut, self.temporal = ls.full_search(self.tree, cam_pos, focal, tau)
-        else:
-            cut, self.temporal = ls.temporal_search(self.tree, self.temporal,
-                                                    cam_pos, focal, tau)
-        return cut
+    @property
+    def mgr_state(self) -> mgr.ManagerState:
+        return self.state.mgr_state
 
-    def _sync(self, cam_pos) -> Tuple[FrameStats, jax.Array]:
-        cut = self._lod_search(jnp.asarray(cam_pos, jnp.float32))
-        mask = cut.mask(self.tree)
-        t = jnp.int32(self.sync_index)
-        self.mgr_state, plan = mgr.cloud_sync(self.mgr_state, mask, t,
-                                              jnp.int32(self.cfg.w_star))
-        # wire: Δcut payload (compressed) + cut membership deltas
-        ids, n_delta = mgr.gather_payload(self.tree.gaussians, plan.delta_data,
-                                          self.cfg.cut_budget)
-        payload = self.tree.gaussians.slice_rows(jnp.clip(ids, 0))
-        if self.cfg.use_compression:
-            enc = comp.encode(self.codec, payload)
-            dec = comp.decode(self.codec, enc, payload.sh.shape[1])
-        else:
-            dec = payload
-        # client applies the sync
-        self.client = mgr.client_sync(self.client, plan.delta_data, plan.cut_add,
-                                      plan.cut_remove, t, jnp.int32(self.cfg.w_star))
-        valid = (ids >= 0)[:, None]
-        safe_ids = jnp.clip(ids, 0)
-        st = self.client_store
-        self.client_store = Gaussians(
-            mu=st.mu.at[safe_ids].set(jnp.where(valid, dec.mu, st.mu[safe_ids])),
-            log_scale=st.log_scale.at[safe_ids].set(
-                jnp.where(valid, dec.log_scale, st.log_scale[safe_ids])),
-            quat=st.quat.at[safe_ids].set(jnp.where(valid, dec.quat, st.quat[safe_ids])),
-            opacity=st.opacity.at[safe_ids].set(
-                jnp.where(valid[:, 0], dec.opacity, st.opacity[safe_ids])),
-            sh=st.sh.at[safe_ids].set(
-                jnp.where(valid[:, :, None], dec.sh, st.sh[safe_ids])),
-        )
-        gids, count, overflow = ls.cut_gids(cut, self.tree, self.cfg.cut_budget)
-        self.current_cut_ids = gids
-        stats = FrameStats(
-            frame=self.frame_index, synced=True,
-            cut_size=int(count), delta_size=int(n_delta),
-            sync_bytes=float(plan.wire_bytes(self.bytes_per_g)),
-            nodes_touched=int(cut.nodes_touched),
-            resweeps=int(np.asarray(cut.resweep).sum()),
-            client_resident=int(plan.n_resident))
-        self.sync_index += 1
-        return stats, gids
+    @property
+    def client(self) -> mgr.ClientState:
+        return self.state.client
 
-    # -- client --------------------------------------------------------------
+    @property
+    def temporal(self) -> ls.TemporalState:
+        return self.state.temporal
+
+    @property
+    def client_store(self) -> Gaussians:
+        return self.state.client_store
+
+    @property
+    def sync_index(self) -> int:
+        return int(self.state.sync_index)
+
+    @property
+    def frame_index(self) -> int:
+        return int(self.state.frame_index)
+
+    @property
+    def current_cut_ids(self) -> Optional[jax.Array]:
+        return self.state.cut_gids if self.sync_index > 0 else None
+
+    # -- client ----------------------------------------------------------------
 
     def render(self, rig: StereoRig, gids: jax.Array):
         cfg = self.cfg
-        queue = self.client_store.slice_rows(jnp.clip(gids, 0))
-        # mask out padding rows by zero opacity
+        queue = self.state.client_store.slice_rows(jnp.clip(gids, 0))
         queue = dataclasses.replace(
             queue, opacity=jnp.where(gids >= 0, queue.opacity, 0.0))
         return render_stereo(queue, rig, tile=cfg.tile, list_len=cfg.list_len,
@@ -152,19 +295,18 @@ class CollaborativeSession:
 
     def step(self, rig: StereoRig, render: bool = True):
         """Advance one VR frame. LoD sync happens every cfg.w frames."""
-        synced = self.frame_index % self.cfg.w == 0 or self.current_cut_ids is None
-        if synced:
-            stats, gids = self._sync(np.asarray(rig.left.pos))
-        else:
-            gids = self.current_cut_ids
-            stats = FrameStats(frame=self.frame_index, synced=False,
-                               cut_size=int((np.asarray(gids) >= 0).sum()),
-                               delta_size=0,
-                               sync_bytes=float(mgr.POSE_UPLINK_BYTES),
-                               nodes_touched=0, resweeps=0,
-                               client_resident=int(self.client.has.sum()))
-        out = self.render(rig, gids) if render else None
-        self.frame_index += 1
+        frame = int(self.state.frame_index)
+        focal = jnp.float32(self.rig_template.left.focal)
+        self.state, st = session_step(
+            self.tree, self.codec, self.cfg, self.state,
+            np.asarray(rig.left.pos), focal, self.bytes_per_g)
+        stats = FrameStats(
+            frame=frame, synced=bool(st.synced),
+            cut_size=int(st.cut_size), delta_size=int(st.delta_size),
+            sync_bytes=float(st.sync_bytes),
+            nodes_touched=int(st.nodes_touched), resweeps=int(st.resweeps),
+            client_resident=int(st.client_resident))
+        out = client_render_step(self.cfg, self.state, rig) if render else None
         return stats, out
 
 

@@ -12,14 +12,30 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Version-tolerant mesh construction.
+
+    Newer JAX exposes `jax.sharding.AxisType` and `jax.make_mesh(...,
+    axis_types=...)`; older releases (e.g. 0.4.x) have neither. All our
+    axes are Auto (the compiler is free to pick collectives), which is also
+    the default when the parameter does not exist."""
+    shape, axes = tuple(shape), tuple(axes)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass  # make_mesh predates the axis_types kwarg
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes) -> jax.sharding.Mesh:
     """Arbitrary mesh (tests use small fake-device meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -1,0 +1,2 @@
+"""Batched serving: the multi-client LoD cloud service (`lod_service`) and
+the LM prefill/decode engine (`engine`)."""

@@ -1,0 +1,245 @@
+"""Batched multi-client LoD service — the cloud half of paper Fig. 9/10 at
+serving scale.
+
+In the paper's collaborative split, the cloud runs the temporal-aware LoD
+search and the Gaussian-management table per headset, and ships compressed
+Δcuts downstream; the client only renders (Fig. 10 keeps the
+motion-to-photon path entirely client-side). This module scales the cloud
+half from one headset to B concurrent headsets against ONE shared city tree:
+
+  * one `LodTree` + one scene codec are shared by every client (the codec is
+    scene-level, so the client-side "codebook buffer" of §5 is identical for
+    all users);
+  * per-client state — `TemporalState` (LoD-search reuse), `ManagerState`
+    (management table), sync counters — is stacked on a leading batch axis
+    (`ServiceState`), exactly the functional-core layout of
+    repro.core.pipeline scaled to B;
+  * `service_sync_vmapped` runs the per-frame temporal LoD search vmapped
+    across clients: one fused device program, bit-identical per client to the
+    sequential single-client search;
+  * `service_sync_pooled` is the host-driven scheduler: the cheap exact
+    top-tree sweep + staleness predicate runs vmapped for all clients, then
+    the *stale (client, slab) pairs of every client are pooled into one
+    power-of-two bucket* and swept by a single
+    `lod_search.sweep_slab_camera_pairs` dispatch (each pair carries its own
+    camera). This extends `temporal_search_hybrid` across clients: wall-clock
+    cost scales with TOTAL staleness in the fleet, not with client count — a
+    fleet of mostly-still headsets costs almost nothing beyond the top
+    sweeps.
+
+Per-sync, per-client byte and work accounting (`ServiceStats`) feeds
+benchmarks/bench_multiclient.py (the multi-user analog of the paper's
+bandwidth figures). Follow-ons tracked in ROADMAP.md: cross-client Δcut
+payload dedup (overlapping viewers request the same Gaussians) and
+client-side Pallas stereo batching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core import lod_search as ls
+from repro.core import manager as mgr
+from repro.core.lod_tree import LodTree
+from repro.core.pipeline import SessionConfig, session_wire_format
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ServiceState:
+    """All per-client cloud state, batched on a leading (B, ...) axis."""
+
+    mgr: mgr.ManagerState       # leaves (B, N)
+    temporal: ls.TemporalState  # leaves (B, Ns, ...)
+    cut_gids: jax.Array         # (B, cut_budget) int32, -1 padded
+    sync_index: jax.Array       # (B,) int32
+
+    @property
+    def n_clients(self) -> int:
+        return self.sync_index.shape[0]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ServiceStats:
+    """Per-client accounting for one service sync (all leaves (B,))."""
+
+    cut_size: jax.Array        # int32 — render-queue size
+    delta_size: jax.Array      # int32 — Δcut Gaussians shipped
+    sync_bytes: jax.Array      # float32 — downlink bytes (payload + ids)
+    nodes_touched: jax.Array   # int32 — LoD-search work attributed to client
+    resweeps: jax.Array        # int32 — stale subtrees swept
+    client_resident: jax.Array  # int32 — client store occupancy after sync
+    overflow: jax.Array        # bool — cut exceeded cut_budget (queue truncated)
+
+
+def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int
+                 ) -> ServiceState:
+    m = tree.meta
+    return ServiceState(
+        mgr=jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_clients,) + a.shape),
+            mgr.ManagerState.initial(tree.n_pad)),
+        temporal=ls.TemporalState.initial_batched(m.Ns, m.S, n_clients),
+        cut_gids=jnp.full((n_clients, cfg.cut_budget), -1, jnp.int32),
+        sync_index=jnp.zeros((n_clients,), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("budget",))
+def _batched_cut_gids(masks: jax.Array, budget: int):
+    def one(m):
+        (g,) = jnp.nonzero(m, size=budget, fill_value=-1)
+        return g.astype(jnp.int32), m.sum().astype(jnp.int32)
+    return jax.vmap(one)(masks)
+
+
+def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
+                 temporal: ls.TemporalState, masks: jax.Array,
+                 nodes_touched: jax.Array, resweeps: jax.Array,
+                 bytes_per_g: float) -> Tuple[ServiceState, ServiceStats]:
+    """Shared tail of both sync paths: batched management-table update,
+    per-client render queues, and accounting."""
+    new_mgr, plan = mgr.batched_cloud_sync(state.mgr, masks, state.sync_index,
+                                           jnp.int32(cfg.w_star))
+    gids, counts = _batched_cut_gids(masks, cfg.cut_budget)
+    new_state = ServiceState(
+        mgr=new_mgr, temporal=temporal, cut_gids=gids,
+        sync_index=state.sync_index + 1)
+    stats = ServiceStats(
+        cut_size=counts,
+        delta_size=plan.n_delta,
+        sync_bytes=mgr.batched_wire_bytes(plan, bytes_per_g),
+        nodes_touched=nodes_touched.astype(jnp.int32),
+        resweeps=resweeps.astype(jnp.int32),
+        client_resident=plan.n_resident,
+        overflow=counts > cfg.cut_budget)
+    return new_state, stats
+
+
+def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
+                         state: ServiceState, cam_positions, focal,
+                         bytes_per_g: float
+                         ) -> Tuple[ServiceState, ServiceStats]:
+    """One LoD sync for every client, fully on-device (vmapped search).
+
+    Exactness reference for the pooled scheduler; also the right path when
+    nearly everything is stale (e.g. the fleet's first frame)."""
+    cams = jnp.asarray(cam_positions, jnp.float32)
+    cut, temporal = ls.batched_temporal_search(
+        tree, state.temporal, cams, jnp.float32(focal), jnp.float32(cfg.tau))
+    masks = ls.batched_cut_mask(cut, tree)
+    return _finish_sync(tree, cfg, state, temporal, masks,
+                        cut.nodes_touched, cut.resweep.sum(axis=1),
+                        bytes_per_g)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _apply_pooled_updates(slab_cut, root_expand, rho, cam0, sel_b, sel_s,
+                          f_cut, f_rexp, f_rho, cam_sel):
+    """Scatter pooled sweep results back into the batched temporal state.
+    Repeat-padded (client, slab) pairs write identical values — harmless."""
+    return (slab_cut.at[sel_b, sel_s].set(f_cut),
+            root_expand.at[sel_b, sel_s].set(f_rexp),
+            rho.at[sel_b, sel_s].set(f_rho),
+            cam0.at[sel_b, sel_s].set(cam_sel))
+
+
+def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
+                        state: ServiceState, cam_positions, focal,
+                        bytes_per_g: float
+                        ) -> Tuple[ServiceState, ServiceStats]:
+    """One LoD sync for every client with cross-client slab pooling.
+
+    Host-driven (the batched analog of `temporal_search_hybrid`): gather the
+    stale (client, slab) pairs of ALL clients, round the pool up to a
+    power-of-two bucket (bounded recompilation), sweep it in one dispatch —
+    each pair with its own camera — and scatter back. Bit-identical results
+    to `service_sync_vmapped`.
+
+    NOTE: like `temporal_search_hybrid`, the scatter donates the incoming
+    `state.temporal` buffers (no (B, Ns, S) re-copy per sync). On backends
+    that honor donation the input state is CONSUMED — keep using the
+    returned state, never the argument."""
+    m = tree.meta
+    cams = jnp.asarray(cam_positions, jnp.float32)
+    top_cut, rpe, stale = ls.batched_top_and_staleness(
+        tree, state.temporal, cams, jnp.float32(focal), jnp.float32(cfg.tau))
+    stale_np = np.asarray(stale)
+    b_idx, s_idx = np.nonzero(stale_np)
+    n_stale = len(b_idx)
+
+    tp = state.temporal
+    slab_cut, root_expand, rho, cam0 = (tp.slab_cut0, tp.root_expand0,
+                                        tp.rho, tp.cam0)
+    if n_stale > 0:
+        n_pairs = stale_np.size
+        bucket = 1 << int(np.ceil(np.log2(max(n_stale, 1))))
+        bucket = min(bucket, n_pairs)
+        pad = np.resize(np.arange(n_stale), bucket)  # repeat-pad the pool
+        sel_b = jnp.asarray(b_idx[pad])
+        sel_s = jnp.asarray(s_idx[pad])
+        f_cut, f_rexp, f_rho = ls.sweep_slab_camera_pairs(
+            tree.slab_mu()[sel_s], tree.slab_size()[sel_s],
+            tree.slab_parent[sel_s], tree.slab_level[sel_s],
+            tree.slab_is_leaf[sel_s], tree.slab_valid[sel_s],
+            rpe[sel_b, sel_s], cams[sel_b],
+            jnp.float32(focal), jnp.float32(cfg.tau), m.slab_max_depth)
+        slab_cut, root_expand, rho, cam0 = _apply_pooled_updates(
+            slab_cut, root_expand, rho, cam0, sel_b, sel_s,
+            f_cut, f_rexp, f_rho, cams[sel_b])
+
+    temporal = ls.TemporalState(
+        cam0=cam0, rho=rho, parent_expand0=rpe, slab_cut0=slab_cut,
+        root_expand0=root_expand,
+        swept=jnp.ones_like(stale))
+    nodes_touched = m.T + stale.sum(axis=1).astype(jnp.int32) * m.S
+    cut = ls.CutResult(top_cut=top_cut, slab_cut=slab_cut,
+                       root_expand=root_expand, resweep=stale,
+                       nodes_touched=nodes_touched)
+    masks = ls.batched_cut_mask(cut, tree)
+    return _finish_sync(tree, cfg, state, temporal, masks, nodes_touched,
+                        stale.sum(axis=1), bytes_per_g)
+
+
+class LodService:
+    """Thin stateful wrapper: one shared tree/codec, B client sessions.
+
+    `sync(cam_positions)` advances every client by one LoD sync and returns
+    per-client `ServiceStats`. `mode` picks the scheduler: "pooled"
+    (cross-client bucketed hybrid — the production path) or "vmapped"
+    (always-sweep exactness reference)."""
+
+    def __init__(self, tree: LodTree, cfg: SessionConfig, n_clients: int,
+                 focal: float, mode: str = "pooled"):
+        if mode not in ("pooled", "vmapped"):
+            raise ValueError(f"unknown scheduler mode: {mode!r}")
+        self.tree = tree
+        self.cfg = cfg
+        self.n_clients = n_clients
+        self.focal = float(focal)
+        self.mode = mode
+        self.codec, self.bytes_per_g = session_wire_format(tree, cfg)
+        self.state = service_init(tree, cfg, n_clients)
+
+    def sync(self, cam_positions) -> ServiceStats:
+        cams = np.asarray(cam_positions, np.float32)
+        if cams.shape != (self.n_clients, 3):
+            raise ValueError(f"expected ({self.n_clients}, 3) camera "
+                             f"positions, got {cams.shape}")
+        step = (service_sync_pooled if self.mode == "pooled"
+                else service_sync_vmapped)
+        self.state, stats = step(self.tree, self.cfg, self.state, cams,
+                                 self.focal, self.bytes_per_g)
+        return stats
+
+    def client_cut(self, client: int) -> jax.Array:
+        """(cut_budget,) int32 render-queue ids of one client (-1 padded)."""
+        return self.state.cut_gids[client]

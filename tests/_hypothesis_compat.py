@@ -1,0 +1,63 @@
+"""`hypothesis` shim so property tests run with or without the dependency.
+
+When `hypothesis` is installed the real `given` / `settings` / `st` are
+re-exported unchanged. When it is not, a deterministic fallback expands each
+`@given(...)` into a `pytest.mark.parametrize` over seeded examples (the seed
+is derived from the test name, so runs are reproducible and independent of
+collection order). The fallback supports exactly the strategy surface our
+tests use: `st.floats(lo, hi)` and `st.integers(lo, hi)`.
+
+This keeps the tier-1 suite green on the minimal container image while still
+getting full randomized coverage wherever `hypothesis` is available
+(see requirements-dev.txt).
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import zlib
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+else:
+    import numpy as np
+    import pytest
+
+    FALLBACK_EXAMPLES = 10  # seeded examples per property test
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: "np.random.Generator"):
+            return self._draw_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    st = _Strategies()
+
+    def settings(**_kw):
+        """No-op in the fallback (example count is FALLBACK_EXAMPLES)."""
+        return lambda fn: fn
+
+    def given(**strategies):
+        names = sorted(strategies)
+
+        def deco(fn):
+            seed = zlib.crc32(fn.__name__.encode())
+            cases = []
+            for i in range(FALLBACK_EXAMPLES):
+                rng = np.random.default_rng([seed, i])
+                cases.append(tuple(strategies[n].draw(rng) for n in names))
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+        return deco
