@@ -1,0 +1,78 @@
+"""Fleet-batched stereo rendering: per-client frame cost vs a sequential
+per-client loop (ROADMAP "client-side Pallas stereo batching").
+
+Sweeps B ∈ {1, 4, 16} cloud-rendered fallback clients sharing one scene cut,
+each with its own rig along a city walk. The batched path is
+`repro.render.batched_render_stereo` (the whole project→bin→merge→rasterize
+chain on a leading client axis, bit-identical per client to the sequential
+loop — proven in tests/test_render_batched.py); the baseline calls the
+single-client pipeline B times. Headline: per-client stereo frame cost DROPS
+monotonically from B=1 to B=16 — per-op dispatch overhead and the many small
+tile-scan ops amortize across the fleet. The `jit` rows additionally fuse the
+whole fleet into one XLA program (fastest, allclose rather than bitwise)."""
+
+import dataclasses as dc
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import city_scene, emit, rigs_along_walk, timeit
+from repro import render as rnd
+from repro.core import lod_search as ls
+
+FOCAL, TAU = 260.0, 96.0
+BATCHES = (1, 4, 16)
+WIDTH, HEIGHT = 64, 48
+LIST_LEN = 64
+MAX_PAIRS = 1 << 14
+
+
+def _fleet():
+    _cfg, _leaves, tree = city_scene("small")
+    rigs = rigs_along_walk(max(BATCHES), extent=(100.0, 100.0), width=WIDTH,
+                           height=HEIGHT, focal=FOCAL)
+    # one shared cut (the fleet serves one neighborhood); per-client rigs
+    cut, _ = ls.full_search(tree, np.asarray(rigs[0].left.pos),
+                            jnp.float32(FOCAL), jnp.float32(TAU))
+    gids, cnt, _ = ls.cut_gids(cut, tree, budget=1024)
+    q = tree.gaussians.slice_rows(jnp.clip(gids, 0))
+    q = dc.replace(q, opacity=jnp.where(gids >= 0, q.opacity, 0.0))
+    return q, rigs, int(cnt)
+
+
+def run():
+    queue, rigs_all, n = _fleet()
+    emit("stereo_batched/queue_size", 0.0,
+         f"{n} gaussians {WIDTH}x{HEIGHT}")
+
+    for b in BATCHES:
+        rigs = rigs_all[:b]
+        cfg = rnd.RenderConfig.for_fleet(rigs, tile=16, list_len=LIST_LEN,
+                                         max_pairs=MAX_PAIRS)
+        queues = rnd.stack_pytrees([queue] * b)
+        stacked = rnd.stack_rigs(rigs)
+
+        t_batched = timeit(lambda: rnd.batched_render_stereo(
+            queues, stacked, cfg, path="vmap")[:2], repeats=5)
+        t_jit = timeit(lambda: rnd.batched_render_stereo(
+            queues, stacked, cfg, path="vmap", jit=True)[:2], repeats=5)
+
+        def sequential():
+            outs = []
+            for i in range(b):
+                plan = rnd.build_plan(queues[i], rigs[i], cfg)
+                outs.append(rnd.render_stereo(plan, cfg)[:2])
+            return outs
+
+        t_seq = timeit(sequential, repeats=5)
+        emit(f"stereo_batched/b{b}/frame_us_per_client", t_batched / b,
+             f"fleet={t_batched:.0f}us sequential_per_client={t_seq / b:.0f}us "
+             f"speedup={t_seq / t_batched:.2f}x")
+        emit(f"stereo_batched/b{b}/frame_us_per_client_jit", t_jit / b,
+             f"whole-fleet jit (allclose, not bitwise) "
+             f"speedup_vs_seq={t_seq / t_jit:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,7 @@ MODULES = [
     "benchmarks.bench_multiclient",  # multi-user cloud serving (ROADMAP)
     "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24
     "benchmarks.bench_stereo",       # Figs. 8/21
+    "benchmarks.bench_stereo_batched",  # fleet-batched client rendering
     "benchmarks.bench_quality",      # Figs. 16/17(quality)
     "benchmarks.bench_e2e",          # Figs. 18/19/22
     "benchmarks.bench_tile_size",    # Figs. 23/25

@@ -1,19 +1,23 @@
 """Batched multi-client cloud session (the paper's Fig. 9 cloud, B headsets).
 
 One shared city tree + codec serves a fleet of head-tracked clients: the
-per-sync temporal LoD search is vmapped across clients and the stale-subtree
-sweeps of all clients are pooled into one bucketed dispatch
-(repro.serve.lod_service). Prints a per-client accounting table and the
-fleet-level bandwidth vs per-user H.265 video streaming.
+per-sync temporal LoD search is vmapped across clients (each with its own
+foveated τ) and the stale-subtree sweeps of all clients are pooled into one
+bucketed dispatch (repro.serve.lod_service). After the session, the cloud
+renders a batched stereo frame for the fallback tier — headsets too weak to
+rasterize locally — via the repro.render subsystem. Prints a per-client
+accounting table and the fleet-level bandwidth vs per-user H.265 video
+streaming.
 
     PYTHONPATH=src python examples/multi_client_session.py [--clients 8]
 """
 
 import argparse
+import dataclasses as dc
 
 import numpy as np
 
-from repro.core.camera import TrajectoryConfig, walk_trajectory
+from repro.core.camera import StereoRig, TrajectoryConfig, walk_trajectory
 from repro.core.gaussians import CityConfig, generate_city
 from repro.core.lod_tree import build_lod_tree
 from repro.core.pipeline import SessionConfig
@@ -38,16 +42,21 @@ def main():
 
     # every client walks the same city on its own seed
     walks = []
+    last_cams = []
     for c in range(b):
-        cams = walk_trajectory(TrajectoryConfig(seed=c), args.syncs,
-                               (200.0, 200.0), focal_px=FOCAL,
-                               width=160, height=96)
+        cams = list(walk_trajectory(TrajectoryConfig(seed=c), args.syncs,
+                                    (200.0, 200.0), focal_px=FOCAL,
+                                    width=160, height=96))
         walks.append(np.stack([np.asarray(cam.pos, np.float32)
                                for cam in cams]))
+        last_cams.append(cams[-1])
     walks = np.stack(walks, axis=1)  # (syncs, B, 3)
 
     cfg = SessionConfig(tau=48.0, w=4, w_star=32, cut_budget=16384)
-    service = LodService(tree, cfg, b, focal=FOCAL, mode="pooled")
+    # foveated fleet: half the clients run a looser (coarser) LoD threshold
+    taus = np.where(np.arange(b) % 2 == 0, cfg.tau, 1.75 * cfg.tau
+                    ).astype(np.float32)
+    service = LodService(tree, cfg, b, focal=FOCAL, mode="pooled", taus=taus)
 
     total_bytes = np.zeros(b)
     for f in range(args.syncs):
@@ -72,6 +81,17 @@ def main():
     print(f"\nfleet mean bandwidth/client: nebula {nb/1e6:.1f} Mbps vs "
           f"H.265@VR {video/1e6:.0f} Mbps → {nb/video*100:.1f}% "
           f"(×{b} clients served from one tree)")
+
+    # fallback tier: the cloud renders every client's queue in ONE batched
+    # stereo dispatch (repro.render.batched_render_stereo)
+    rigs = [StereoRig(left=dc.replace(cam, width=96, height=64, cx=48.0,
+                                      cy=32.0), baseline=0.06)
+            for cam in last_cams]
+    il, ir, fstats = service.render_fallback(rigs, list_len=192)
+    print(f"\nfallback render: {il.shape[0]} stereo frames "
+          f"{il.shape[2]}x{il.shape[1]} in one batched dispatch; "
+          f"per-client splats shared across eyes: "
+          f"{np.asarray(fstats.shared_preprocess).tolist()}")
 
 
 if __name__ == "__main__":

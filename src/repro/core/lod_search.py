@@ -249,14 +249,19 @@ def batched_temporal_search(tree: LodTree, states: TemporalState,
     """`temporal_search` vmapped over B clients sharing one tree.
 
     states' leaves carry a leading (B, ...) axis (see
-    `TemporalState.initial_batched`); cam_positions is (B, 3). Returns a
+    `TemporalState.initial_batched`); cam_positions is (B, 3). `tau` may be a
+    scalar (one threshold for everyone) or a (B,) per-client vector —
+    foveated / gaze-dependent LoD: a client with a looser (larger) τ expands
+    less of the tree and receives a strictly coarser, smaller cut. Returns a
     CutResult / TemporalState whose leaves are batched the same way — each
     client's slice is bit-identical to a sequential per-client
-    `temporal_search`. Shared-tree reads are broadcast, so the whole batch is
-    one fused device program."""
+    `temporal_search` at its own τ. Shared-tree reads are broadcast, so the
+    whole batch is one fused device program."""
     cam_positions = jnp.asarray(cam_positions, jnp.float32)
-    return jax.vmap(temporal_search, in_axes=(None, 0, 0, None, None))(
-        tree, states, cam_positions, focal, tau)
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32),
+                            (cam_positions.shape[0],))
+    return jax.vmap(temporal_search, in_axes=(None, 0, 0, None, 0))(
+        tree, states, cam_positions, focal, taus)
 
 
 def batched_cut_mask(cut: CutResult, tree: LodTree) -> jax.Array:
@@ -293,14 +298,17 @@ def _top_and_staleness(tree: LodTree, state: TemporalState, cam_pos, focal, tau)
 def batched_top_and_staleness(tree: LodTree, states: TemporalState,
                               cam_positions: jax.Array, focal, tau):
     """Per-client cheap phase of the hybrid search: exact top-tree sweep +
-    per-subtree staleness predicate, vmapped over B clients.
+    per-subtree staleness predicate, vmapped over B clients. `tau` is a
+    scalar or a (B,) per-client vector (foveated LoD).
 
     Returns (top_cut (B,T), rpe (B,Ns), stale (B,Ns)). The expensive phase —
     sweeping only the stale (client, slab) pairs — is host-scheduled across
     clients by repro.serve.lod_service."""
     cam_positions = jnp.asarray(cam_positions, jnp.float32)
-    return jax.vmap(_top_and_staleness, in_axes=(None, 0, 0, None, None))(
-        tree, states, cam_positions, focal, tau)
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32),
+                            (cam_positions.shape[0],))
+    return jax.vmap(_top_and_staleness, in_axes=(None, 0, 0, None, 0))(
+        tree, states, cam_positions, focal, taus)
 
 
 @functools.partial(jax.jit, static_argnames=("max_depth",))
@@ -310,13 +318,20 @@ def sweep_slab_camera_pairs(slab_mu, slab_size, slab_parent, slab_level,
     """Sweep K (slab, camera) pairs in one vmapped program.
 
     Unlike `_sweep_selected` (one shared camera), every pair carries its own
-    camera position — the primitive behind the cross-client pooled scheduler,
-    where stale slabs of *different* clients share one bucketed dispatch.
+    camera position — and its own τ when `tau` is a (K,) vector (foveated
+    fleets pool pairs of clients with different thresholds into the same
+    bucket) — the primitive behind the cross-client pooled scheduler, where
+    stale slabs of *different* clients share one bucketed dispatch.
     Returns (in_cut (K,S), root_expand (K,), rho (K,))."""
-    fn = functools.partial(_slab_sweep_one, focal=focal, tau=tau,
-                           max_depth=max_depth)
+    k = slab_size.shape[0]
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (k,))
+
+    def fn(mu, size, parent, level, leaf, valid, rpe, cam, tau_k):
+        return _slab_sweep_one(mu, size, parent, level, leaf, valid, rpe,
+                               cam, focal, tau_k, max_depth=max_depth)
+
     return jax.vmap(fn)(slab_mu, slab_size, slab_parent, slab_level,
-                        slab_is_leaf, slab_valid, rpe_sel, cam_sel)
+                        slab_is_leaf, slab_valid, rpe_sel, cam_sel, taus)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))

@@ -30,13 +30,11 @@ import numpy as np
 from repro.core import compression as comp
 from repro.core import lod_search as ls
 from repro.core import manager as mgr
-from repro.core.binning import BinConfig, bin_left, bin_right
-from repro.core.camera import Camera, StereoRig
+from repro.core.camera import StereoRig
 from repro.core.gaussians import Gaussians
 from repro.core.lod_tree import LodTree
-from repro.core.projection import Splats, depth_ranks, project
-from repro.core.raster import render_reference, render_tiles
-from repro.core.stereo import alpha_skip_stats, n_categories, stereo_lists
+from repro.core.stereo import alpha_skip_stats
+from repro import render as rnd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -313,37 +311,20 @@ class CollaborativeSession:
 def render_stereo(queue: Gaussians, rig: StereoRig, *, tile: int = 16,
                   list_len: int = 256, max_pairs: int = 1 << 16):
     """Client stereo pipeline: shared preprocessing → left raster →
-    triangulation shift-merge → right raster. Returns (left, right, stats)."""
-    cam = rig.left
-    max_disp = rig.max_disparity_px()
-    n_cat = n_categories(max_disp, tile)
-    tiles_x_r = -(-cam.width // tile)
-    wide_width = (tiles_x_r + n_cat - 1) * tile
-    wide = dataclasses.replace(cam, width=wide_width)
+    triangulation shift-merge → right raster. Returns (left, right, stats).
 
-    splats = project(queue, rig, wide)
-    ranks = depth_ranks(splats)
-    bcfg = BinConfig(tile=tile, max_pairs=max_pairs, list_len=list_len)
-
-    left_lists = bin_left(splats, wide_width, cam.height, bcfg, ranks)
-    img_l, hits = render_tiles(left_lists, splats, width=cam.width,
-                               height=cam.height, tile=tile, eye="left")
-    right_lists = stereo_lists(left_lists, splats, ranks, tile=tile,
-                               width=cam.width, n_cat=n_cat)
-    img_r, _ = render_tiles(right_lists, splats, width=cam.width,
-                            height=cam.height, tile=tile, eye="right")
-    stats = alpha_skip_stats(left_lists, right_lists, hits, splats)
-    return img_l, img_r, (splats, left_lists, right_lists, stats)
+    Legacy single-client surface over the `repro.render` subsystem: builds a
+    `RenderConfig` + `RenderPlan` and rasterizes — the same stages
+    `repro.render.batched.batched_render_stereo` vmaps across a fleet
+    (bit-identical per client, proven in tests)."""
+    cfg = rnd.RenderConfig.for_rig(rig, tile=tile, list_len=list_len,
+                                   max_pairs=max_pairs)
+    plan = rnd.build_plan(queue, rig, cfg)
+    img_l, img_r, hits = rnd.render_stereo(plan, cfg)
+    stats = alpha_skip_stats(plan.left, plan.right, hits, plan.splats)
+    return img_l, img_r, (plan.splats, plan.left, plan.right, stats)
 
 
 def render_stereo_reference(queue: Gaussians, rig: StereoRig):
     """Two fully independent eye renders (the BASE baseline of Fig. 16)."""
-    cam = rig.left
-    max_disp = rig.max_disparity_px()
-    n_cat = n_categories(max_disp, 16)
-    tiles_x_r = -(-cam.width // 16)
-    wide = dataclasses.replace(cam, width=(tiles_x_r + n_cat - 1) * 16)
-    splats = project(queue, rig, wide)
-    img_l = render_reference(splats, width=cam.width, height=cam.height, eye="left")
-    img_r = render_reference(splats, width=cam.width, height=cam.height, eye="right")
-    return img_l, img_r
+    return rnd.render_stereo_reference(queue, rig)

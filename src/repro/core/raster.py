@@ -1,106 +1,21 @@
-"""Tile rasterization — pure-JAX client path (oracle-consistent).
+"""Tile rasterization — legacy import shim over the `repro.render` subsystem.
 
-`render_tiles` consumes depth-ordered per-tile lists; `render_reference`
-blends *all* splats per pixel in global depth order with no tiling at all —
-the independent oracle. Because the α_min threshold zeroes every contribution
-the binning could have culled (the list AABB is the α≥α_min iso-ellipse
-bound), the two produce bitwise-identical images; tests assert exact
-equality. The Pallas kernel (repro.kernels.rasterize) adds per-tile early
-termination on top of the same math."""
+The implementations moved to `repro.render.stages` (XLA renderers) and
+`repro.render.common` (shared eye-view/α math) as part of the render-subsystem
+extraction; this module re-exports them so existing imports keep working:
+
+    repro.core.raster.render_tiles      -> repro.render.stages.render_tiles
+    repro.core.raster.render_reference  -> repro.render.stages.render_reference
+    repro.core.raster.eye_views         -> repro.render.common.eye_views
+    repro.core.raster._alpha            -> repro.render.common.pixel_alpha
+"""
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from repro.render.common import eye_views, pixel_alpha
+from repro.render.stages import render_reference, render_tiles
 
-import jax
-import jax.numpy as jnp
+_alpha = pixel_alpha
 
-from repro.core.binning import BinConfig, TileLists
-from repro.core.projection import ALPHA_MAX, ALPHA_MIN, Splats
-
-
-def eye_views(s: Splats, eye: str) -> Tuple[jax.Array, jax.Array]:
-    """(means, colors) for the requested eye. Right = triangulation shift."""
-    if eye == "left":
-        return s.mean2d, s.color_l
-    shift = jnp.stack([s.disparity, jnp.zeros_like(s.disparity)], -1)
-    return s.mean2d - shift, s.color_r
-
-
-def _alpha(px: jax.Array, mean: jax.Array, conic: jax.Array, opa: jax.Array
-           ) -> jax.Array:
-    """α of one splat at pixel centers px (..., 2)."""
-    d = px - mean
-    power = 0.5 * (conic[0] * d[..., 0] ** 2
-                   + 2.0 * conic[1] * d[..., 0] * d[..., 1]
-                   + conic[2] * d[..., 1] ** 2)
-    a = opa * jnp.exp(-power)
-    a = jnp.minimum(a, ALPHA_MAX)
-    return jnp.where(a >= ALPHA_MIN, a, 0.0)
-
-
-@functools.partial(jax.jit, static_argnames=("width", "height", "tile", "eye"))
-def render_tiles(lists: TileLists, s: Splats, *, width: int, height: int,
-                 tile: int, eye: str) -> Tuple[jax.Array, jax.Array]:
-    """Render from per-tile lists. Returns (image (H,W,3), alpha_hit (n_tiles, L)).
-
-    alpha_hit[t, i] — entry i of tile t passed the α-check at ≥1 pixel; this is
-    exactly what the paper's SRU forwards to the stereo buffer."""
-    means, colors = eye_views(s, eye)
-    tiles_x, tiles_y = lists.tiles_x, lists.tiles_y
-
-    ty, tx = jnp.meshgrid(jnp.arange(tiles_y), jnp.arange(tiles_x), indexing="ij")
-    origins = jnp.stack([tx.reshape(-1) * tile, ty.reshape(-1) * tile], -1)
-
-    yy, xx = jnp.meshgrid(jnp.arange(tile), jnp.arange(tile), indexing="ij")
-    px_local = jnp.stack([xx + 0.5, yy + 0.5], -1)   # (T, T, 2) pixel centers
-
-    def tile_fn(list_row, origin):
-        px = px_local + origin.astype(jnp.float32)
-
-        def step(carry, idx):
-            color_acc, t_acc = carry
-            valid = idx >= 0
-            g = jnp.clip(idx, 0, s.m - 1)
-            a = _alpha(px, means[g], s.conic[g], s.opacity[g])
-            a = jnp.where(valid, a, 0.0)
-            contrib = t_acc * a
-            color_acc = color_acc + contrib[..., None] * colors[g]
-            t_acc = t_acc * (1.0 - a)
-            return (color_acc, t_acc), (a > 0.0).any()
-
-        init = (jnp.zeros((tile, tile, 3), jnp.float32),
-                jnp.ones((tile, tile), jnp.float32))
-        (color, _t), hit = jax.lax.scan(step, init, list_row)
-        return color, hit
-
-    colors_t, hits = jax.vmap(tile_fn)(lists.lists, origins)   # (n_tiles, T, T, 3)
-    img = colors_t.reshape(tiles_y, tiles_x, tile, tile, 3)
-    img = img.transpose(0, 2, 1, 3, 4).reshape(tiles_y * tile, tiles_x * tile, 3)
-    return img[:height, :width], hits
-
-
-@functools.partial(jax.jit, static_argnames=("width", "height", "eye"))
-def render_reference(s: Splats, *, width: int, height: int, eye: str) -> jax.Array:
-    """Oracle: per-pixel blend of every splat in global depth order (no tiles)."""
-    means, colors = eye_views(s, eye)
-    key = jnp.where(s.visible, s.depth, jnp.inf)
-    order = jnp.argsort(key, stable=True)
-
-    yy, xx = jnp.meshgrid(jnp.arange(height), jnp.arange(width), indexing="ij")
-    px = jnp.stack([xx + 0.5, yy + 0.5], -1).astype(jnp.float32)
-
-    def step(carry, g):
-        color_acc, t_acc = carry
-        a = _alpha(px, means[g], s.conic[g], s.opacity[g])
-        a = jnp.where(s.visible[g], a, 0.0)
-        contrib = t_acc * a
-        color_acc = color_acc + contrib[..., None] * colors[g]
-        t_acc = t_acc * (1.0 - a)
-        return (color_acc, t_acc), None
-
-    init = (jnp.zeros((height, width, 3), jnp.float32),
-            jnp.ones((height, width), jnp.float32))
-    (img, _), _ = jax.lax.scan(step, init, order)
-    return img
+__all__ = ["eye_views", "pixel_alpha", "_alpha", "render_tiles",
+           "render_reference"]

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.binning import TileLists
 from repro.core.projection import Splats
-from repro.core.raster import eye_views
+from repro.render.common import eye_views
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lod_cut import lod_slab_sweep_pallas
@@ -160,14 +160,17 @@ def stereo_merge(left: TileLists, s: Splats, ranks: jax.Array, *, tile: int,
     """Kernelized stereo.stereo_lists (same TileLists output)."""
     src_ranks, src_ids = build_merge_sources(left, s, ranks, tile=tile,
                                              width=width, n_cat=n_cat)
+    l_len = left.lists.shape[1]
     if use_pallas:
-        out, counts = stereo_merge_pallas(src_ranks, src_ids, interpret=interpret)
+        out, counts, ovf = stereo_merge_pallas(src_ranks, src_ids,
+                                               interpret=interpret)
+        merge_overflow = ovf.any()
     else:
         out, counts = kref.ref_stereo_merge(src_ranks, src_ids)
+        merge_overflow = (counts > l_len).any()
     tiles_x_r = -(-width // tile)
-    l_len = left.lists.shape[1]
     return TileLists(lists=out, counts=jnp.minimum(counts, l_len),
-                     overflow=left.overflow | (counts > l_len).any(),
+                     overflow=left.overflow | merge_overflow,
                      tiles_x=tiles_x_r, tiles_y=left.tiles_y)
 
 

@@ -1,18 +1,29 @@
 """Pallas TPU kernel: tile rasterization (the paper's VRC, §5).
 
-Dataflow mirrors GSCore's volume rendering core: per grid cell = one image
-tile; the tile's depth-ordered Gaussian entries are streamed through VMEM and
+Dataflow mirrors GSCore's volume rendering core: per grid cell = one tile
+slab; the slab's depth-ordered Gaussian entries are streamed through VMEM and
 broadcast to all T×T "rendering units" (vector lanes); each lane α-checks and
-front-to-back blends. Early termination stops the entry loop once every
-lane's transmittance is exhausted (eps_t) — set eps_t=0.0 for the bitwise
-mode used by the stereo bit-accuracy proofs.
+front-to-back blends (the α test itself is the shared definition in
+repro.render.common — one expression for every rasterization path). Early
+termination stops the entry loop once every lane's transmittance is exhausted
+(eps_t) — set eps_t=0.0 for the bitwise mode used by the stereo bit-accuracy
+proofs.
 
-Entry layout (pre-gathered by ops.rasterize — the attribute broadcast of
-Fig. 14): entries[t, i] = [mean_x, mean_y, conic_a, conic_b, conic_c,
-r, g, b, opacity]; invalid slots carry opacity = 0.
+The kernel is ORIGIN-BASED: each slab carries its own pixel-space tile corner,
+so the grid needs no image-shape knowledge. That is what lets
+repro.render.batched pool the occupied slabs of a whole client fleet — mixed
+clients, mixed eyes, mixed grid positions — into one dispatch
+(`rasterize_slabs_pallas`); the classic one-image entry point
+(`rasterize_tiles_pallas`) derives origins from the tile grid and calls the
+same kernel.
 
-BlockSpec: one (1, L, 9) entry slab + one (1,) count per tile in VMEM;
-output is the (1, T, T, 3) tile image + (1, L) α-hit flags (the SRU feed).
+Entry layout (pre-gathered by ops.gather_entries from RenderPlan slabs — the
+attribute broadcast of Fig. 14): entries[t, i] = [mean_x, mean_y, conic_a,
+conic_b, conic_c, r, g, b, opacity]; invalid slots carry opacity = 0.
+
+BlockSpec: one (1, L, 9) entry slab + one (1,) count + one (1, 2) origin per
+grid cell in VMEM; output is the (1, T, T, 3) tile image + (1, L) α-hit flags
+(the SRU feed).
 """
 
 from __future__ import annotations
@@ -23,14 +34,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.projection import ALPHA_MAX, ALPHA_MIN
+from repro.render.common import entry_alpha
 
 
-def _raster_kernel(count_ref, entries_ref, img_ref, hit_ref, *, tile: int,
-                   tiles_x: int, eps_t: float):
-    tid = pl.program_id(0)
-    ox = (tid % tiles_x) * tile
-    oy = (tid // tiles_x) * tile
+def _raster_kernel(origin_ref, count_ref, entries_ref, img_ref, hit_ref, *,
+                   tile: int, eps_t: float):
+    ox = origin_ref[0, 0]
+    oy = origin_ref[0, 1]
     px = (jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 1)
           + ox.astype(jnp.float32) + 0.5)
     py = (jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 0)
@@ -47,12 +57,7 @@ def _raster_kernel(count_ref, entries_ref, img_ref, hit_ref, *, tile: int,
     def body(state):
         i, color, t_acc, hits = state
         e = entries[i]
-        dx = px - e[0]
-        dy = py - e[1]
-        power = 0.5 * (e[2] * dx * dx + 2.0 * e[3] * dx * dy + e[4] * dy * dy)
-        a = e[8] * jnp.exp(-power)
-        a = jnp.minimum(a, ALPHA_MAX)
-        a = jnp.where(a >= ALPHA_MIN, a, 0.0)
+        a = entry_alpha(px, py, e)
         contrib = t_acc * a
         color = color + contrib[..., None] * e[5:8]
         t_acc = t_acc * (1.0 - a)
@@ -68,19 +73,26 @@ def _raster_kernel(count_ref, entries_ref, img_ref, hit_ref, *, tile: int,
     hit_ref[0] = hits
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "tiles_x", "eps_t", "interpret"))
-def rasterize_tiles_pallas(entries: jax.Array, counts: jax.Array, *, tile: int,
-                           tiles_x: int, eps_t: float = 0.0,
-                           interpret: bool = True):
-    """entries: (n_tiles, L, 9) f32; counts: (n_tiles,) int32.
-    Returns (tile_images (n_tiles, T, T, 3), hits (n_tiles, L))."""
-    n_tiles, l_max, _ = entries.shape
-    kernel = functools.partial(_raster_kernel, tile=tile, tiles_x=tiles_x,
-                               eps_t=eps_t)
+@functools.partial(jax.jit, static_argnames=("tile", "eps_t", "interpret"))
+def rasterize_slabs_pallas(entries: jax.Array, counts: jax.Array,
+                           origins: jax.Array, *, tile: int,
+                           eps_t: float = 0.0, interpret: bool = True):
+    """Rasterize arbitrary tile slabs — each with its own pixel origin.
+
+    entries: (n_slabs, L, 9) f32; counts: (n_slabs,) int32;
+    origins: (n_slabs, 2) int32 pixel-space tile corners (x, y).
+    Returns (tile_images (n_slabs, T, T, 3), hits (n_slabs, L)).
+
+    This is the fleet-pooled entry point: slabs may come from different
+    clients, eyes, and grid positions (repro.render.batched pools occupied
+    slabs into power-of-two buckets and makes ONE dispatch here)."""
+    n_slabs, l_max, _ = entries.shape
+    kernel = functools.partial(_raster_kernel, tile=tile, eps_t=eps_t)
     return pl.pallas_call(
         kernel,
-        grid=(n_tiles,),
+        grid=(n_slabs,),
         in_specs=[
+            pl.BlockSpec((1, 2), lambda t: (t, 0)),
             pl.BlockSpec((1,), lambda t: (t,)),
             pl.BlockSpec((1, l_max, 9), lambda t: (t, 0, 0)),
         ],
@@ -89,8 +101,22 @@ def rasterize_tiles_pallas(entries: jax.Array, counts: jax.Array, *, tile: int,
             pl.BlockSpec((1, l_max), lambda t: (t, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_tiles, tile, tile, 3), jnp.float32),
-            jax.ShapeDtypeStruct((n_tiles, l_max), jnp.bool_),
+            jax.ShapeDtypeStruct((n_slabs, tile, tile, 3), jnp.float32),
+            jax.ShapeDtypeStruct((n_slabs, l_max), jnp.bool_),
         ],
         interpret=interpret,
-    )(counts, entries)
+    )(origins, counts, entries)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "tiles_x", "eps_t", "interpret"))
+def rasterize_tiles_pallas(entries: jax.Array, counts: jax.Array, *, tile: int,
+                           tiles_x: int, eps_t: float = 0.0,
+                           interpret: bool = True):
+    """One-image entry point: entries: (n_tiles, L, 9) f32 laid out on a
+    row-major (tiles_y, tiles_x) grid; counts: (n_tiles,) int32.
+    Returns (tile_images (n_tiles, T, T, 3), hits (n_tiles, L))."""
+    n_tiles = entries.shape[0]
+    idx = jnp.arange(n_tiles, dtype=jnp.int32)
+    origins = jnp.stack([(idx % tiles_x) * tile, (idx // tiles_x) * tile], -1)
+    return rasterize_slabs_pallas(entries, counts, origins, tile=tile,
+                                  eps_t=eps_t, interpret=interpret)

@@ -14,30 +14,27 @@ import jax.numpy as jnp
 
 from repro.core import lod_search as _ls
 from repro.core.compression import vq_assign_ref as ref_vq_assign  # noqa: F401
-from repro.core.projection import ALPHA_MAX, ALPHA_MIN
+from repro.render.common import entry_alpha
 
 
-def ref_rasterize(entries: jax.Array, counts: jax.Array, *, tile: int,
-                  tiles_x: int, eps_t: float = 0.0):
-    """Oracle for rasterize.rasterize_tiles_pallas (same entry layout)."""
-    n_tiles, l_max, _ = entries.shape
+def ref_rasterize_slabs(entries: jax.Array, counts: jax.Array,
+                        origins: jax.Array, *, tile: int, eps_t: float = 0.0):
+    """Oracle for rasterize.rasterize_slabs_pallas: origin-based tile slabs
+    (the fleet-pooled entry layout)."""
+    n_slabs, l_max, _ = entries.shape
 
     yy, xx = jnp.meshgrid(jnp.arange(tile), jnp.arange(tile), indexing="ij")
 
-    def tile_fn(tid, ent, count):
-        ox = (tid % tiles_x) * tile
-        oy = (tid // tiles_x) * tile
+    def tile_fn(origin, ent, count):
+        ox = origin[0]
+        oy = origin[1]
         px = xx.astype(jnp.float32) + ox + 0.5
         py = yy.astype(jnp.float32) + oy + 0.5
 
         def step(carry, i):
             color, t_acc, hits, alive = carry
             e = ent[i]
-            dx = px - e[0]
-            dy = py - e[1]
-            power = 0.5 * (e[2] * dx * dx + 2 * e[3] * dx * dy + e[4] * dy * dy)
-            a = jnp.minimum(e[8] * jnp.exp(-power), ALPHA_MAX)
-            a = jnp.where(a >= ALPHA_MIN, a, 0.0)
+            a = entry_alpha(px, py, e)
             active = alive & (i < count)
             a = jnp.where(active, a, 0.0)
             contrib = t_acc * a
@@ -54,7 +51,17 @@ def ref_rasterize(entries: jax.Array, counts: jax.Array, *, tile: int,
         (color, _t, hits, _a), _ = jax.lax.scan(step, init, jnp.arange(l_max))
         return color, hits
 
-    return jax.vmap(tile_fn)(jnp.arange(n_tiles), entries, counts)
+    return jax.vmap(tile_fn)(origins, entries, counts)
+
+
+def ref_rasterize(entries: jax.Array, counts: jax.Array, *, tile: int,
+                  tiles_x: int, eps_t: float = 0.0):
+    """Oracle for rasterize.rasterize_tiles_pallas (same entry layout)."""
+    n_tiles = entries.shape[0]
+    idx = jnp.arange(n_tiles, dtype=jnp.int32)
+    origins = jnp.stack([(idx % tiles_x) * tile, (idx // tiles_x) * tile], -1)
+    return ref_rasterize_slabs(entries, counts, origins, tile=tile,
+                               eps_t=eps_t)
 
 
 def ref_lod_slab_sweep(slab_mu, slab_size, slab_parent, slab_level,

@@ -18,7 +18,7 @@ from jax.experimental import pallas as pl
 _INF = 2**30  # plain literal — jnp constants would be captured as consts
 
 
-def _merge_kernel(ranks_ref, ids_ref, out_ref, cnt_ref, *, n_cat: int,
+def _merge_kernel(ranks_ref, ids_ref, out_ref, cnt_ref, ovf_ref, *, n_cat: int,
                   l_len: int, out_len: int):
     ranks = ranks_ref[0]      # (n_cat, L) int32, INF-padded, each row sorted
     ids = ids_ref[0]          # (n_cat, L) int32
@@ -50,6 +50,7 @@ def _merge_kernel(ranks_ref, ids_ref, out_ref, cnt_ref, *, n_cat: int,
     _, out, count, _ = jax.lax.fori_loop(0, n_cat * l_len, body, init)
     out_ref[0] = out
     cnt_ref[0] = count
+    ovf_ref[0] = count > out_len
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -57,7 +58,13 @@ def stereo_merge_pallas(src_ranks: jax.Array, src_ids: jax.Array, *,
                         interpret: bool = True):
     """src_ranks/src_ids: (n_tiles, n_cat, L) — per right tile, the n_cat
     include-filtered sorted source rows (INF/-1 padded).
-    Returns (merged ids (n_tiles, L), counts (n_tiles,))."""
+    Returns (merged ids (n_tiles, L), counts (n_tiles,), overflow (n_tiles,)).
+
+    `overflow[t]` flags a merge that produced more unique entries than the
+    output capacity — the write loop drops the tail, so a True flag means
+    tile t's list is TRUNCATED (counts still reports the untruncated total;
+    callers surface the flag on the merged TileLists instead of silently
+    clamping)."""
     n_tiles, n_cat, l_len = src_ranks.shape
     kernel = functools.partial(_merge_kernel, n_cat=n_cat, l_len=l_len,
                                out_len=l_len)
@@ -71,10 +78,12 @@ def stereo_merge_pallas(src_ranks: jax.Array, src_ids: jax.Array, *,
         out_specs=[
             pl.BlockSpec((1, l_len), lambda t: (t, 0)),
             pl.BlockSpec((1,), lambda t: (t,)),
+            pl.BlockSpec((1,), lambda t: (t,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_tiles, l_len), jnp.int32),
             jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.bool_),
         ],
         interpret=interpret,
     )(src_ranks, src_ids)

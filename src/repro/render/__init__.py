@@ -1,0 +1,33 @@
+"""Client render subsystem: batched fleet-wide stereo rasterization from
+projection to pixels (paper §4.4/§5; ROADMAP "client-side Pallas stereo
+batching").
+
+Layering (import order matters — repro.core.raster re-exports from here):
+
+    common  — the ONE definition of eye-view selection + the α test
+    config  — RenderConfig: static tile/resolution/stereo geometry
+    plan    — RenderPlan pytree + vmappable StereoFrameStats
+    stages  — project / bin_shared / stereo_merge / rasterize,
+              render_stereo(plan), the XLA rasterizers
+    batched — batched_render_stereo: vmapped XLA path + pooled Pallas
+              bucket path (fleet-wide occupied-tile pooling)
+"""
+
+from repro.render.common import entry_alpha, eye_views, pixel_alpha, splat_alpha
+from repro.render.config import RenderConfig
+from repro.render.plan import RenderPlan, StereoFrameStats, frame_stats
+from repro.render.stages import (bin_shared, build_plan, project, rasterize,
+                                 render_reference, render_stereo,
+                                 render_stereo_reference, render_tiles,
+                                 stereo_merge)
+from repro.render.batched import (batched_build_plans, batched_render_stereo,
+                                  stack_pytrees, stack_rigs)
+
+__all__ = [
+    "entry_alpha", "eye_views", "pixel_alpha", "splat_alpha",
+    "RenderConfig", "RenderPlan", "StereoFrameStats", "frame_stats",
+    "project", "bin_shared", "stereo_merge", "rasterize", "build_plan",
+    "render_stereo", "render_stereo_reference", "render_tiles",
+    "render_reference", "batched_build_plans", "batched_render_stereo",
+    "stack_pytrees", "stack_rigs",
+]

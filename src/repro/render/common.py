@@ -1,0 +1,65 @@
+"""Shared per-splat shading math — the ONE definition of eye-view selection
+and the α test (paper §4.4's bit-accuracy hinges on every rasterization path
+evaluating the exact same expression).
+
+Consumers:
+  * the XLA tile renderer / untiled reference (repro.render.stages, re-exported
+    through repro.core.raster for legacy imports);
+  * the pure-jnp kernel oracle (repro.kernels.ref);
+  * the Pallas rasterization kernel body (repro.kernels.rasterize) — the helper
+    is plain jnp, so it traces identically inside a kernel.
+
+Keeping one definition here is what lets the stereo bit-accuracy proofs cover
+all four paths: any change to the α math changes every path at once.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.projection import ALPHA_MAX, ALPHA_MIN, Splats
+
+
+def eye_views(s: Splats, eye: str) -> Tuple[jax.Array, jax.Array]:
+    """(means, colors) for the requested eye. Right = triangulation shift
+    x_R = x_L − B·f/z (depth, conic, and extent are eye-invariant)."""
+    if eye == "left":
+        return s.mean2d, s.color_l
+    shift = jnp.stack([s.disparity, jnp.zeros_like(s.disparity)], -1)
+    return s.mean2d - shift, s.color_r
+
+
+def splat_alpha(dx, dy, conic_a, conic_b, conic_c, opacity, *,
+                alpha_min: float = ALPHA_MIN, alpha_max: float = ALPHA_MAX):
+    """α of one splat at pixel offset (dx, dy) from its center.
+
+    Op order is load-bearing: `opacity * exp(-power)` then the min/threshold —
+    every rasterization path must emit this exact sequence for bitwise
+    reproducibility across program structures."""
+    power = 0.5 * (conic_a * dx * dx + 2.0 * conic_b * dx * dy
+                   + conic_c * dy * dy)
+    a = opacity * jnp.exp(-power)
+    a = jnp.minimum(a, alpha_max)
+    return jnp.where(a >= alpha_min, a, 0.0)
+
+
+def pixel_alpha(px: jax.Array, mean: jax.Array, conic: jax.Array,
+                opacity: jax.Array, *, alpha_min: float = ALPHA_MIN,
+                alpha_max: float = ALPHA_MAX) -> jax.Array:
+    """α at pixel centers px (..., 2) — the (mean, conic) call form used by
+    the XLA renderers."""
+    d = px - mean
+    return splat_alpha(d[..., 0], d[..., 1], conic[0], conic[1], conic[2],
+                       opacity, alpha_min=alpha_min, alpha_max=alpha_max)
+
+
+def entry_alpha(px, py, entry, *, alpha_min: float = ALPHA_MIN,
+                alpha_max: float = ALPHA_MAX):
+    """α for one pre-gathered entry row [mx, my, ca, cb, cc, r, g, b, opa]
+    (the Fig. 14 attribute-broadcast layout consumed by the kernels)."""
+    return splat_alpha(px - entry[0], py - entry[1], entry[2], entry[3],
+                       entry[4], entry[8], alpha_min=alpha_min,
+                       alpha_max=alpha_max)

@@ -1,0 +1,102 @@
+"""Static render-geometry configuration for the client stereo pipeline.
+
+Everything a compiled render program needs to know at trace time lives here:
+tile size, per-eye resolution, list/pair budgets, the stereo line-buffer
+width n_cat (derived from the rig's near-plane disparity bound), and the α
+thresholds. Per-client quantities that vary at runtime (camera pose, focal,
+the render queue) stay pytree leaves — that split is what makes one
+`RenderConfig` serve a whole fleet: `batched_render_stereo` vmaps the plan
+construction across clients under a single static config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.core.binning import BinConfig
+from repro.core.camera import Camera, StereoRig
+from repro.core.projection import ALPHA_MAX, ALPHA_MIN
+from repro.core.stereo import n_categories
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderConfig:
+    """Static stereo-render geometry (hashable; safe as a jit static arg).
+
+    width/height: per-eye output resolution in pixels
+    tile:         tile side in pixels
+    list_len:     per-tile depth-list capacity
+    max_pairs:    (splat, tile) expansion budget for binning
+    n_cat:        stereo line-buffer rows = ⌊max_disparity/tile⌋ + 2
+    alpha_min/alpha_max: α test thresholds (paper defaults; XLA path honors
+                  overrides, the Pallas kernels assume the defaults)
+    eps_t:        early-termination transmittance (0.0 = bitwise mode)
+    """
+
+    width: int
+    height: int
+    tile: int = 16
+    list_len: int = 256
+    max_pairs: int = 1 << 16
+    n_cat: int = 2
+    alpha_min: float = ALPHA_MIN
+    alpha_max: float = ALPHA_MAX
+    eps_t: float = 0.0
+
+    @classmethod
+    def for_rig(cls, rig: StereoRig, *, tile: int = 16, list_len: int = 256,
+                max_pairs: int = 1 << 16, eps_t: float = 0.0) -> "RenderConfig":
+        """Config for one rig (n_cat from its near-plane disparity bound)."""
+        return cls(width=rig.left.width, height=rig.left.height, tile=tile,
+                   list_len=list_len, max_pairs=max_pairs,
+                   n_cat=n_categories(rig.max_disparity_px(), tile),
+                   eps_t=eps_t)
+
+    @classmethod
+    def for_fleet(cls, rigs: Iterable[StereoRig], *, tile: int = 16,
+                  list_len: int = 256, max_pairs: int = 1 << 16,
+                  eps_t: float = 0.0) -> "RenderConfig":
+        """Config covering a fleet of rigs: shared resolution is required;
+        n_cat is the max over rigs so the widened plane covers every client's
+        disparity range."""
+        rigs = list(rigs)
+        if not rigs:
+            raise ValueError("for_fleet needs at least one rig")
+        w, h = rigs[0].left.width, rigs[0].left.height
+        for r in rigs[1:]:
+            if (r.left.width, r.left.height) != (w, h):
+                raise ValueError("fleet rigs must share one resolution: "
+                                 f"{(w, h)} vs {(r.left.width, r.left.height)}")
+        n_cat = max(n_categories(r.max_disparity_px(), tile) for r in rigs)
+        return cls(width=w, height=h, tile=tile, list_len=list_len,
+                   max_pairs=max_pairs, n_cat=n_cat, eps_t=eps_t)
+
+    # -- derived static geometry ----------------------------------------------
+
+    @property
+    def tiles_x(self) -> int:
+        """Right-eye (output) tile columns."""
+        return -(-self.width // self.tile)
+
+    @property
+    def tiles_y(self) -> int:
+        return -(-self.height // self.tile)
+
+    @property
+    def tiles_x_wide(self) -> int:
+        """Widened-left tile columns (covers the union of both frusta)."""
+        return self.tiles_x + self.n_cat - 1
+
+    @property
+    def wide_width(self) -> int:
+        return self.tiles_x_wide * self.tile
+
+    def bin_config(self) -> BinConfig:
+        return BinConfig(tile=self.tile, max_pairs=self.max_pairs,
+                         list_len=self.list_len)
+
+    def widened(self, cam: Camera) -> Camera:
+        """The shared-preprocessing camera: same intrinsics/principal point,
+        image plane extended to wide_width columns."""
+        return dataclasses.replace(cam, width=self.wide_width)

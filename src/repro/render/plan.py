@@ -1,0 +1,83 @@
+"""RenderPlan — everything the rasterization stage needs, as one pytree.
+
+A plan is the output of the explicit pipeline stages (project → bin_shared →
+stereo_merge): projected splats, the shared front-to-back depth ranks, and
+both eyes' tile lists. It is a plain pytree, so plans vmap/stack cleanly on a
+leading client axis — `batched_render_stereo` builds one batched plan for the
+whole fleet and the kernels consume its slabs directly.
+
+`StereoFrameStats` is the array-valued (vmappable) per-frame accounting; the
+host-int `repro.core.stereo.StereoStats` remains for the legacy single-client
+API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binning import TileLists
+from repro.core.projection import Splats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RenderPlan:
+    """Client render plan (pure data; all leaves arrays).
+
+    splats: (M, ...) projected 2D Gaussians on the widened-left plane
+    ranks:  (M,) shared front-to-back depth ranks (one sort, two eyes)
+    left:   widened-grid tile lists (binning output)
+    right:  right-eye tile lists (shift-merge output)
+    """
+
+    splats: Splats
+    ranks: jax.Array
+    left: TileLists
+    right: TileLists
+
+    @property
+    def overflow(self) -> jax.Array:
+        """() bool — any budget (pairs, list, merge) exceeded anywhere."""
+        return self.left.overflow | self.right.overflow
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StereoFrameStats:
+    """One stereo frame's work-sharing accounting, as arrays (vmappable).
+
+    shared_preprocess:   () int32 — splats projected once instead of twice
+    left_blends:         () int32 — (tile, entry) pairs blended, left eye
+    right_candidates:    () int32 — entries merged for the right eye
+    right_alpha_skipped: () int32 — right candidates prunable by left α-check
+    overflow:            () bool  — any plan budget exceeded
+    """
+
+    shared_preprocess: jax.Array
+    left_blends: jax.Array
+    right_candidates: jax.Array
+    right_alpha_skipped: jax.Array
+    overflow: jax.Array
+
+
+def frame_stats(plan: RenderPlan, left_hits: jax.Array) -> StereoFrameStats:
+    """Array-valued analog of `repro.core.stereo.alpha_skip_stats` (the
+    paper's step-② forwarding accounting), safe under jit/vmap."""
+    s = plan.splats
+    m = s.m
+    hit_any = jnp.zeros((m + 1,), bool)
+    g = jnp.where(plan.left.lists >= 0, plan.left.lists, m)
+    hit_any = hit_any.at[g.reshape(-1)].max(left_hits.reshape(-1))
+    rg = jnp.where(plan.right.lists >= 0, plan.right.lists, m)
+    r_valid = plan.right.lists >= 0
+    r_hit = hit_any[rg] & r_valid
+    return StereoFrameStats(
+        shared_preprocess=s.visible.sum().astype(jnp.int32),
+        left_blends=(plan.left.lists >= 0).sum().astype(jnp.int32),
+        right_candidates=r_valid.sum().astype(jnp.int32),
+        right_alpha_skipped=(r_valid & ~r_hit).sum().astype(jnp.int32),
+        overflow=plan.overflow,
+    )

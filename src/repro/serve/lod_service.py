@@ -47,8 +47,10 @@ import numpy as np
 from repro.core import compression as comp
 from repro.core import lod_search as ls
 from repro.core import manager as mgr
+from repro.core.gaussians import Gaussians
 from repro.core.lod_tree import LodTree
 from repro.core.pipeline import SessionConfig, session_wire_format
+from repro import render as rnd
 
 
 @jax.tree_util.register_dataclass
@@ -124,17 +126,30 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     return new_state, stats
 
 
+def _fleet_taus(cfg: SessionConfig, n_clients: int, taus) -> jnp.ndarray:
+    """(B,) per-client LoD thresholds: cfg.tau everywhere unless a foveated
+    per-client vector is given (ROADMAP "Quality": τ as a (B,) vector)."""
+    if taus is None:
+        return jnp.full((n_clients,), cfg.tau, jnp.float32)
+    taus = jnp.asarray(taus, jnp.float32)
+    if taus.shape != (n_clients,):
+        raise ValueError(f"expected ({n_clients},) taus, got {taus.shape}")
+    return taus
+
+
 def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
                          state: ServiceState, cam_positions, focal,
-                         bytes_per_g: float
+                         bytes_per_g: float, taus=None
                          ) -> Tuple[ServiceState, ServiceStats]:
     """One LoD sync for every client, fully on-device (vmapped search).
 
     Exactness reference for the pooled scheduler; also the right path when
-    nearly everything is stale (e.g. the fleet's first frame)."""
+    nearly everything is stale (e.g. the fleet's first frame). `taus` is an
+    optional (B,) per-client foveated threshold vector."""
     cams = jnp.asarray(cam_positions, jnp.float32)
+    tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     cut, temporal = ls.batched_temporal_search(
-        tree, state.temporal, cams, jnp.float32(focal), jnp.float32(cfg.tau))
+        tree, state.temporal, cams, jnp.float32(focal), tau_b)
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks,
                         cut.nodes_touched, cut.resweep.sum(axis=1),
@@ -154,7 +169,7 @@ def _apply_pooled_updates(slab_cut, root_expand, rho, cam0, sel_b, sel_s,
 
 def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         state: ServiceState, cam_positions, focal,
-                        bytes_per_g: float
+                        bytes_per_g: float, taus=None
                         ) -> Tuple[ServiceState, ServiceStats]:
     """One LoD sync for every client with cross-client slab pooling.
 
@@ -170,8 +185,9 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     returned state, never the argument."""
     m = tree.meta
     cams = jnp.asarray(cam_positions, jnp.float32)
+    tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     top_cut, rpe, stale = ls.batched_top_and_staleness(
-        tree, state.temporal, cams, jnp.float32(focal), jnp.float32(cfg.tau))
+        tree, state.temporal, cams, jnp.float32(focal), tau_b)
     stale_np = np.asarray(stale)
     b_idx, s_idx = np.nonzero(stale_np)
     n_stale = len(b_idx)
@@ -191,7 +207,7 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
             tree.slab_parent[sel_s], tree.slab_level[sel_s],
             tree.slab_is_leaf[sel_s], tree.slab_valid[sel_s],
             rpe[sel_b, sel_s], cams[sel_b],
-            jnp.float32(focal), jnp.float32(cfg.tau), m.slab_max_depth)
+            jnp.float32(focal), tau_b[sel_b], m.slab_max_depth)
         slab_cut, root_expand, rho, cam0 = _apply_pooled_updates(
             slab_cut, root_expand, rho, cam0, sel_b, sel_s,
             f_cut, f_rexp, f_rho, cams[sel_b])
@@ -209,16 +225,49 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         stale.sum(axis=1), bytes_per_g)
 
 
+# ---------------------------------------------------------------------------
+# fleet render step (cloud-rendered fallback clients)
+# ---------------------------------------------------------------------------
+
+
+def _masked_queue(gaussians: Gaussians, gids: jax.Array) -> Gaussians:
+    """One client's render queue from its cut ids (-1 padding → α=0 rows)."""
+    queue = gaussians.slice_rows(jnp.clip(gids, 0))
+    return dataclasses.replace(
+        queue, opacity=jnp.where(gids >= 0, queue.opacity, 0.0))
+
+
+def service_render_step(tree: LodTree, state: ServiceState, rigs,
+                        rcfg: "rnd.RenderConfig", *, path: str = "vmap",
+                        interpret: bool = True):
+    """Render EVERY client's current cut queue cloud-side in one batched
+    stereo dispatch (the fallback tier of Fig. 10: headsets too weak to run
+    the client rasterizer receive pixels, not Gaussians).
+
+    Queues are gathered from the cloud's raw tree attributes (the cloud never
+    holds the lossy client decode). `rigs` carries a leading client axis (see
+    `repro.render.stack_rigs`); `path` picks the vmapped XLA renderer or the
+    fleet-pooled Pallas bucket path. Returns (img_l (B,H,W,3), img_r,
+    per-client `repro.render.StereoFrameStats`) — the frame-side accounting
+    that sits alongside the sync-side `ServiceStats`."""
+    queues = jax.vmap(lambda g: _masked_queue(tree.gaussians, g)
+                      )(state.cut_gids)
+    return rnd.batched_render_stereo(queues, rigs, rcfg, path=path,
+                                     interpret=interpret)
+
+
 class LodService:
     """Thin stateful wrapper: one shared tree/codec, B client sessions.
 
     `sync(cam_positions)` advances every client by one LoD sync and returns
     per-client `ServiceStats`. `mode` picks the scheduler: "pooled"
     (cross-client bucketed hybrid — the production path) or "vmapped"
-    (always-sweep exactness reference)."""
+    (always-sweep exactness reference). `taus` optionally gives every client
+    its own foveated LoD threshold (B,). `render_fallback(rigs)` rasterizes
+    every client's current queue cloud-side in one batched dispatch."""
 
     def __init__(self, tree: LodTree, cfg: SessionConfig, n_clients: int,
-                 focal: float, mode: str = "pooled"):
+                 focal: float, mode: str = "pooled", taus=None):
         if mode not in ("pooled", "vmapped"):
             raise ValueError(f"unknown scheduler mode: {mode!r}")
         self.tree = tree
@@ -226,6 +275,9 @@ class LodService:
         self.n_clients = n_clients
         self.focal = float(focal)
         self.mode = mode
+        # validate eagerly (shared with the sync-time path)
+        self.taus = (None if taus is None
+                     else np.asarray(_fleet_taus(cfg, n_clients, taus)))
         self.codec, self.bytes_per_g = session_wire_format(tree, cfg)
         self.state = service_init(tree, cfg, n_clients)
 
@@ -237,9 +289,32 @@ class LodService:
         step = (service_sync_pooled if self.mode == "pooled"
                 else service_sync_vmapped)
         self.state, stats = step(self.tree, self.cfg, self.state, cams,
-                                 self.focal, self.bytes_per_g)
+                                 self.focal, self.bytes_per_g, taus=self.taus)
         return stats
 
     def client_cut(self, client: int) -> jax.Array:
         """(cut_budget,) int32 render-queue ids of one client (-1 padded)."""
         return self.state.cut_gids[client]
+
+    def render_fallback(self, rigs, *, tile: int = 16, list_len: int = 256,
+                        max_pairs: int = 1 << 16, path: str = "vmap",
+                        interpret: bool = True):
+        """Fleet render of all B clients' queues → (img_l, img_r, stats).
+
+        `rigs` is a list of B StereoRigs (shared resolution/baseline) or an
+        already-stacked rig pytree."""
+        if isinstance(rigs, (list, tuple)):
+            rcfg = rnd.RenderConfig.for_fleet(rigs, tile=tile,
+                                              list_len=list_len,
+                                              max_pairs=max_pairs)
+            rigs = rnd.stack_rigs(rigs)
+        else:
+            from repro.core.stereo import n_categories
+            max_disp = (float(jnp.max(rigs.left.focal)) * rigs.baseline
+                        / rigs.left.near)
+            rcfg = rnd.RenderConfig(
+                width=rigs.left.width, height=rigs.left.height, tile=tile,
+                list_len=list_len, max_pairs=max_pairs,
+                n_cat=n_categories(max_disp, tile))
+        return service_render_step(self.tree, self.state, rigs, rcfg,
+                                   path=path, interpret=interpret)

@@ -154,6 +154,9 @@ def test_stereo_merge_kernel(seed):
     np.testing.assert_array_equal(np.asarray(right_p.lists), np.asarray(right_core.lists))
     np.testing.assert_array_equal(np.asarray(right_r.lists), np.asarray(right_core.lists))
     np.testing.assert_array_equal(np.asarray(right_p.counts), np.asarray(right_core.counts))
+    # the merge kernel surfaces its overflow flag (matching TileLists.overflow)
+    assert bool(right_p.overflow) == bool(right_core.overflow)
+    assert bool(right_r.overflow) == bool(right_core.overflow)
 
 
 # -- flash attention ----------------------------------------------------------------

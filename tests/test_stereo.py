@@ -32,6 +32,8 @@ def test_stereo_bit_accurate(n, seed):
     rig = _rig()
     il, ir, (_s, ll, rl, _st) = render_stereo(g, rig, tile=16, list_len=192,
                                               max_pairs=1 << 16)
+    # the bit-accuracy claim is only valid with every budget honored — the
+    # binning AND merge overflow flags must both be surfaced and clean
     assert not bool(ll.overflow) and not bool(rl.overflow)
     ref_l, ref_r = render_stereo_reference(g, rig)
     np.testing.assert_array_equal(np.asarray(il), np.asarray(ref_l))
