@@ -1,0 +1,127 @@
+"""Encode-once fleet sync: bytes and codec work vs fleet size × overlap.
+
+Sweeps B ∈ {1, 4, 16, 64} concurrent headsets × spatial overlap ∈
+{0, 0.5, 0.9} (clients ride one shared walk, fanned out on a ring whose
+radius shrinks with the overlap factor — ov=0.9 is a co-located "tour
+group", ov=0 a spread fleet). Every sync runs the production path: pooled
+on-device scheduling + the encode-once Δcut stream (repro.serve.delta_path).
+
+Reported per (B, overlap):
+  * bytes/client on the shared-payload wire vs the legacy per-client
+    unicast accounting (recovered exactly as sync_bytes + dedup_bytes_saved
+    — no second run needed). NOTE: B=1 / fully disjoint rows legitimately
+    show small NEGATIVE savings — the shared stream carries explicit union
+    ids (2 B/row) the unicast format leaves implicit; sharing by ≥2 clients
+    always wins;
+  * unique vs total Δ Gaussians per sync (the dedup ratio itself);
+  * fleet sync latency (host wall-clock; the only per-sync host await is
+    the pooled scheduler's bucket-size scalar).
+
+The headline: for overlapping viewers, downlink bytes and encode work grow
+with the fleet's UNIQUE Gaussians — sub-linear in B — while the legacy
+accounting grows linearly.
+
+Set NEBULA_BENCH_SMOKE=1 for the CI trajectory run (small scene, fewer
+syncs, same (B, overlap) grid → every row is still present in
+BENCH_fleet_sync.json).
+"""
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import city_scene, emit, rigs_along_walk
+from repro.core.pipeline import SessionConfig
+from repro.serve import lod_service as svc
+
+FOCAL, TAU = 260.0, 48.0
+BATCHES = (1, 4, 16, 64)
+OVERLAPS = (0.0, 0.5, 0.9)
+
+
+def _smoke() -> bool:
+    return os.environ.get("NEBULA_BENCH_SMOKE", "") not in ("", "0")
+
+
+def _walk(syncs: int, seed: int, extent) -> np.ndarray:
+    rigs = rigs_along_walk(syncs, extent=extent, focal=FOCAL, seed=seed)
+    return np.stack([np.asarray(r.left.pos, np.float32) for r in rigs])
+
+
+def _fleet_walk(n_clients: int, syncs: int, overlap: float,
+                extent) -> np.ndarray:
+    """(syncs, B, 3) — everyone follows ONE (slow, headset-realistic) walk;
+    client b's copy is displaced toward its own anchor sampled INSIDE the
+    city interior, scaled by (1 - overlap): ov=1 is fully co-located, ov=0 a
+    fleet spread across the whole scene (per-anchor cuts diverge strongly —
+    the disjoint baseline). Anchors must stay inside the scene: a camera
+    outside it degenerates to the same coarse global cut and the overlap
+    axis stops discriminating."""
+    shared = _walk(syncs, seed=0, extent=extent)
+    rng = np.random.default_rng(17)
+    lo = np.asarray([0.15 * extent[0], 0.15 * extent[1], 0.0], np.float32)
+    hi = np.asarray([0.85 * extent[0], 0.85 * extent[1], 0.0], np.float32)
+    anchors = rng.uniform(lo, hi, (n_clients, 3)).astype(np.float32)
+    offs = (anchors - shared[0]) * (1.0 - overlap)
+    offs[:, 2] = 0.0
+    return (shared[:, None, :] + offs[None, :, :]).astype(np.float32)
+
+
+def run():
+    scale = "small" if _smoke() else "medium"
+    syncs = 5 if _smoke() else 12
+    _cfg, _leaves, tree = city_scene(scale)
+    m = tree.meta
+    hi = np.asarray(tree.gaussians.mu).max(axis=0)
+    extent = (float(hi[0]), float(hi[1]))
+    cfg = SessionConfig(tau=TAU, cut_budget=16384)
+    emit("fleet_sync/scene", 0.0,
+         f"scale={scale} nodes={m.n_real} subtrees={m.Ns} slab={m.S} "
+         f"extent={extent[0]:.0f}x{extent[1]:.0f}m syncs={syncs}")
+
+    for b in BATCHES:
+        for ov in OVERLAPS:
+            walks = _fleet_walk(b, syncs, ov, extent)
+            service = svc.LodService(tree, cfg, b, focal=FOCAL,
+                                     mode="pooled", dedup=True)
+            t0 = time.perf_counter()
+            first = service.sync(walks[0])
+            np.asarray(first.sync_bytes)  # force the first (compile) sync
+            t_first = time.perf_counter() - t0
+
+            times, rows = [], []
+            for f in range(1, syncs):
+                t0 = time.perf_counter()
+                stats = service.sync(walks[f])
+                np.asarray(stats.sync_bytes)  # wall-clock incl. device work
+                times.append(time.perf_counter() - t0)
+                rows.append(stats)
+
+            key = f"fleet_sync/b{b}/ov{int(ov * 100):02d}"
+            dedup_b = np.stack([np.asarray(s.sync_bytes) for s in rows])
+            saved_b = np.stack([np.asarray(s.dedup_bytes_saved) for s in rows])
+            unicast_b = dedup_b + saved_b
+            tot = sum(int(np.asarray(s.delta_size).sum()) for s in rows) \
+                + int(np.asarray(first.delta_size).sum())
+            uniq = sum(int(np.asarray(s.unique_delta).sum()) for s in rows) \
+                + int(np.asarray(first.unique_delta).sum())
+            emit(f"{key}/sync_us", float(np.median(times) * 1e6),
+                 f"per_client={np.median(times)*1e6/b:.0f}us "
+                 f"t_first={t_first*1e3:.0f}ms")
+            emit(f"{key}/bytes_per_client", float(dedup_b.mean()),
+                 f"steady_dedup={dedup_b.mean()/1024:.2f}KiB "
+                 f"unicast={unicast_b.mean()/1024:.2f}KiB "
+                 f"first_dedup={np.asarray(first.sync_bytes).mean()/1024:.1f}KiB")
+            emit(f"{key}/unique_vs_total_delta", 0.0,
+                 f"unique={uniq} total={tot} "
+                 f"ratio={uniq / max(tot, 1):.3f}")
+            emit(f"{key}/fleet_bytes_saved", 0.0,
+                 f"session_total={float(saved_b.sum() + np.asarray(first.dedup_bytes_saved).sum())/1024:.1f}KiB")
+    emit("fleet_sync/summary", 0.0,
+         "encode-once delta path: fleet downlink and codec work follow "
+         "UNIQUE Gaussians per sync, not client count")
+
+
+if __name__ == "__main__":
+    run()

@@ -38,7 +38,11 @@ def run():
 
     for b in BATCHES:
         walks = _fleet_walk(b, SYNCS)
-        service = svc.LodService(tree, cfg, b, focal=FOCAL, mode="pooled")
+        # dedup=False keeps this module's rows comparable to its PR-1
+        # baseline (unicast accounting, no per-sync codec dispatch); the
+        # encode-once path has its own sweep in bench_fleet_sync.py
+        service = svc.LodService(tree, cfg, b, focal=FOCAL, mode="pooled",
+                                 dedup=False)
         # warm-up sync (full sweep for every client) + jit compilation
         t0 = time.perf_counter()
         first = service.sync(walks[0])

@@ -59,9 +59,13 @@ def main():
     service = LodService(tree, cfg, b, focal=FOCAL, mode="pooled", taus=taus)
 
     total_bytes = np.zeros(b)
+    total_delta = total_unique = total_saved = 0.0
     for f in range(args.syncs):
         stats = service.sync(walks[f])
         total_bytes += np.asarray(stats.sync_bytes)
+        total_delta += float(np.asarray(stats.delta_size).sum())
+        total_unique += float(np.asarray(stats.unique_delta).sum())
+        total_saved += float(np.asarray(stats.dedup_bytes_saved).sum())
         if f < 4 or f % 8 == 0:
             sb = np.asarray(stats.sync_bytes)
             print(f"sync {f:3d}: pool={int(np.asarray(stats.resweeps).sum()):4d}"
@@ -74,6 +78,12 @@ def main():
     for c in range(b):
         print(f"  client {c}: {total_bytes[c]/1024:8.1f} KiB "
               f"({total_bytes[c]/args.syncs/1024:6.2f} KiB/sync)")
+
+    print(f"\nencode-once delta path: {int(total_unique)} unique of "
+          f"{int(total_delta)} requested Δ Gaussians "
+          f"({total_unique / max(total_delta, 1) * 100:.1f}%); "
+          f"{total_saved / 1024:.1f} KiB fleet downlink saved vs per-client "
+          f"unicast")
 
     per_sync = total_bytes.mean() / args.syncs
     nb = nebula_bandwidth_bps(per_sync, cfg.w, 90.0)

@@ -102,6 +102,31 @@ class TemporalState:
             lambda a: jnp.broadcast_to(a[None], (B,) + a.shape), base)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SlabTables:
+    """Device-resident slab attribute tables, gathered once per tree.
+
+    `tree.slab_mu()` / `tree.slab_size()` reshape the packed Gaussian arrays
+    on every call; hot schedulers (repro.serve.lod_service) build these
+    tables once at init and fuse the per-sync pair gather into the sweep
+    program instead of re-deriving the views every sync."""
+
+    mu: jax.Array        # (Ns, S, 3)
+    size: jax.Array      # (Ns, S)
+    parent: jax.Array    # (Ns, S) int32
+    level: jax.Array     # (Ns, S) int32
+    is_leaf: jax.Array   # (Ns, S) bool
+    valid: jax.Array     # (Ns, S) bool
+
+    @staticmethod
+    def from_tree(tree: LodTree) -> "SlabTables":
+        return SlabTables(
+            mu=tree.slab_mu(), size=tree.slab_size(),
+            parent=tree.slab_parent, level=tree.slab_level,
+            is_leaf=tree.slab_is_leaf, valid=tree.slab_valid)
+
+
 # ---------------------------------------------------------------------------
 # sweeps
 # ---------------------------------------------------------------------------
@@ -276,6 +301,17 @@ def batched_cut_mask(cut: CutResult, tree: LodTree) -> jax.Array:
 # -- host-driven variant (real wall-clock savings) ---------------------------
 
 
+def pow2_bucket(n: int, cap: int) -> int:
+    """Round `n` up to a power of two, clamped to [1, cap].
+
+    The ONE bounded-recompilation bucket policy shared by every host-driven
+    scheduler: the hybrid stale-slab sweep here, the service's pooled
+    (client, slab) compaction and encode-once union width
+    (repro.serve), and the fleet occupied-tile pooling (repro.render)."""
+    b = 1 << int(np.ceil(np.log2(max(n, 1))))
+    return max(1, min(b, cap))
+
+
 @functools.partial(jax.jit, static_argnames=("max_depth",))
 def _sweep_selected(slab_mu, slab_size, slab_parent, slab_level, slab_is_leaf,
                     slab_valid, rpe_sel, cam_pos, focal, tau, max_depth: int):
@@ -365,8 +401,7 @@ def temporal_search_hybrid(tree: LodTree, state: TemporalState, cam_pos,
     cam0 = state.cam0
 
     if n_stale > 0:
-        bucket = 1 << int(np.ceil(np.log2(max(n_stale, 1))))
-        bucket = min(bucket, m.Ns)
+        bucket = pow2_bucket(n_stale, m.Ns)
         pad = np.resize(idx, bucket)  # repeat-pad; duplicates are harmless
         sel = jnp.asarray(pad)
         f_cut, f_rexp, f_rho = _sweep_selected(

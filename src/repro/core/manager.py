@@ -154,15 +154,37 @@ def batched_cloud_sync(states: ManagerState, cut_masks: jax.Array,
         states, cut_masks, ts, w_star)
 
 
-def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float) -> jax.Array:
+def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float, *,
+                       shared_payload: bool = False) -> jax.Array:
     """(B,) per-client downlink bytes for a batched SyncPlan.
 
     (`SyncPlan.wire_bytes` reduces over every axis and is only correct for the
-    unbatched case.)"""
+    unbatched case.)
+
+    shared_payload=False — the legacy unicast format: every client receives
+    its own encoded Δcut stream (payload bytes ∝ its n_delta; Δ row ids are
+    implicit, recomputable client-side from cut_add & ~has).
+
+    shared_payload=True — the encode-once fleet format
+    (repro.serve.delta_path): the union Δcut is multicast ONCE as
+    [union gids + encoded rows]; clients filter the stream themselves, so the
+    only per-client traffic stays the membership ids + header. Each shared
+    row's cost (attributes + its id) is split evenly across the clients that
+    requested it, so per-client figures still sum to the fleet total:
+    Σ_b bytes_b = U·(bytes_per_gaussian + ID_BYTES_DELTA) + Σ_b(ids_b·2 + hdr)
+    — downlink grows with *unique* Gaussians, not with B. Crossover: a row
+    with a SINGLE requester costs ID_BYTES_DELTA more than on the unicast
+    path (whose Δ ids are implicit), so a fully disjoint fleet pays a small
+    id overhead; sharing by ≥2 clients is always a win."""
     ids = (plan.cut_add.sum(axis=1) + plan.cut_remove.sum(axis=1)
            ).astype(jnp.float32)
-    return (plan.n_delta.astype(jnp.float32) * bytes_per_gaussian
-            + ids * ID_BYTES_DELTA + SYNC_HEADER_BYTES)
+    base = ids * ID_BYTES_DELTA + SYNC_HEADER_BYTES
+    if not shared_payload:
+        return plan.n_delta.astype(jnp.float32) * bytes_per_gaussian + base
+    share = plan.delta_data.sum(axis=0)                      # (N,) requesters
+    frac = jnp.where(plan.delta_data,
+                     1.0 / jnp.maximum(share, 1)[None, :], 0.0).sum(axis=1)
+    return frac * (bytes_per_gaussian + ID_BYTES_DELTA) + base
 
 
 # ---------------------------------------------------------------------------

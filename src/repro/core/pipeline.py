@@ -151,14 +151,17 @@ def cloud_sync_step(tree: LodTree, codec: comp.Codec, cfg: SessionConfig,
     mgr_state, plan = mgr.cloud_sync(state.mgr_state, mask, t,
                                      jnp.int32(cfg.w_star))
     # wire: Δcut payload (compressed) + cut membership deltas
+    # single-client shim: the legacy unicast wire format (one per-client
+    # stream, implicit Δ ids) — the fleet service dedups this per sync via
+    # repro.serve.delta_path, through the same compression.encode_rows
     ids, n_delta = mgr.gather_payload(tree.gaussians, plan.delta_data,
                                       cfg.cut_budget)
-    payload = tree.gaussians.slice_rows(jnp.clip(ids, 0))
+    sh_k = tree.gaussians.sh.shape[1]
     if cfg.use_compression:
-        enc = comp.encode(codec, payload)
-        dec = comp.decode(codec, enc, payload.sh.shape[1])
+        enc = comp.encode_rows(codec, tree.gaussians, ids)
+        dec = comp.decode(codec, enc, sh_k)
     else:
-        dec = payload
+        dec = tree.gaussians.slice_rows(jnp.clip(ids, 0))
     # client applies the sync
     client = mgr.client_sync(state.client, plan.delta_data, plan.cut_add,
                              plan.cut_remove, t, jnp.int32(cfg.w_star))

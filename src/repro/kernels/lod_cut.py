@@ -20,12 +20,12 @@ _EPS_DIST = 1e-6
 _BIG = 3.4e38  # plain literal — jnp constants would be captured as consts
 
 
-def _lod_kernel(params_ref, rpe_ref, mu_ref, size_ref, parent_ref, level_ref,
-                leaf_ref, valid_ref, cut_ref, rexp_ref, rho_ref, *, max_depth: int):
-    cam = params_ref[0:3]
-    focal = params_ref[3]
-    tau = params_ref[4]
-
+def _sweep_body(cam, focal, tau, rpe_ref, mu_ref, size_ref, parent_ref,
+                level_ref, leaf_ref, valid_ref, cut_ref, rexp_ref, rho_ref,
+                max_depth: int):
+    """The ONE slab-sweep body: both kernels below (shared-camera slab grid
+    and per-pair pooled grid) delegate here, so the parity-critical math —
+    level loop, distance clamp, ρ margin — can never diverge between them."""
     mu = mu_ref[0]            # (S, 3)
     size = size_ref[0]        # (S,)
     parent = parent_ref[0]    # (S,)
@@ -56,6 +56,71 @@ def _lod_kernel(params_ref, rpe_ref, mu_ref, size_ref, parent_ref, level_ref,
     cut_ref[0] = in_cut
     rexp_ref[0] = expand[0]
     rho_ref[0] = jnp.min(margin)
+
+
+def _lod_kernel(params_ref, rpe_ref, mu_ref, size_ref, parent_ref, level_ref,
+                leaf_ref, valid_ref, cut_ref, rexp_ref, rho_ref, *, max_depth: int):
+    _sweep_body(params_ref[0:3], params_ref[3], params_ref[4], rpe_ref,
+                mu_ref, size_ref, parent_ref, level_ref, leaf_ref, valid_ref,
+                cut_ref, rexp_ref, rho_ref, max_depth)
+
+
+def _pair_kernel(focal_ref, cam_ref, tau_ref, rpe_ref, mu_ref, size_ref,
+                 parent_ref, level_ref, leaf_ref, valid_ref,
+                 cut_ref, rexp_ref, rho_ref, *, max_depth: int):
+    """One grid cell = one pooled (client, slab) pair: same sweep body as
+    `_lod_kernel`, but camera and τ come from per-pair inputs instead of
+    the shared params vector — the kernel form of
+    repro.core.lod_search.sweep_slab_camera_pairs."""
+    _sweep_body(cam_ref[0], focal_ref[0], tau_ref[0], rpe_ref,
+                mu_ref, size_ref, parent_ref, level_ref, leaf_ref, valid_ref,
+                cut_ref, rexp_ref, rho_ref, max_depth)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth", "interpret"))
+def lod_pair_sweep_pallas(pair_mu, pair_size, pair_parent, pair_level,
+                          pair_is_leaf, pair_valid, root_parent_expand,
+                          cam_pos, focal, tau, *, max_depth: int,
+                          interpret: bool = True):
+    """Sweep K pooled (client, slab) pairs — each with its OWN camera and τ —
+    in one kernel dispatch. Inputs are the gathered pair tables
+    ((K, S, ...) slab attributes, (K,) root-parent-expand bits, (K, 3)
+    cameras, (K,) taus); returns (in_cut (K,S) bool, root_expand (K,),
+    rho (K,)). Bit-parity with `lod_search.sweep_slab_camera_pairs` — the
+    service-sweep kernel behind `LodService(sweep_impl="pallas")`."""
+    k, s = pair_size.shape
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (k,))
+    focal_arr = jnp.asarray(focal, jnp.float32).reshape(1)
+    kernel = functools.partial(_pair_kernel, max_depth=max_depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, s, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, s), jnp.bool_),
+            jax.ShapeDtypeStruct((k,), jnp.bool_),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(focal_arr, jnp.asarray(cam_pos, jnp.float32), taus,
+      root_parent_expand, pair_mu, pair_size, pair_parent, pair_level,
+      pair_is_leaf.astype(jnp.int32), pair_valid.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("max_depth", "interpret"))

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import lod_search as ls
 from repro.core.camera import StereoRig
 from repro.core.gaussians import Gaussians
 from repro.render.config import RenderConfig
@@ -163,8 +164,7 @@ def _pooled_render(queues, rigs, cfg: RenderConfig, *, interpret: bool = True):
 
     occupied = np.nonzero(np.asarray(counts) > 0)[0]
     if occupied.size:
-        bucket = 1 << int(np.ceil(np.log2(max(occupied.size, 1))))
-        bucket = min(bucket, n_slabs)
+        bucket = ls.pow2_bucket(occupied.size, n_slabs)
         sel = jnp.asarray(np.resize(occupied, bucket))
         tiles_img, hits = rasterize_slabs_pallas(
             entries[sel], counts[sel], origins[sel], tile=cfg.tile,

@@ -1,0 +1,153 @@
+"""Encode-once fleet Δcut delivery (cross-client payload dedup).
+
+The per-client service path encodes and ships every client's Δcut
+independently — B co-located viewers pay B× codec work and B× downlink for
+the *same* Gaussians. This module rebuilds that data path around the fleet's
+**unique** work:
+
+  * `build_delta_batch` computes the fleet-union of Δcut gids for one sync
+    (the batched `SyncPlan.delta_data` masks already expose the overlap),
+    gathers the union rows from the shared tree ONCE, and runs the codec
+    quantize/pack ONCE per distinct Gaussian — a single batched
+    `compression.encode` regardless of client count;
+  * per-client payloads are fanned out as *(union-offset, mask)* references
+    (`DeltaBatch.ref_mask`): client b's Δcut is exactly the union rows where
+    `ref_mask[b]` is set, in the same ascending-gid order the per-client
+    path would have produced — so decode-side payloads are bitwise identical
+    to encode-per-client (proven in tests/test_delta_path.py);
+  * the wire model is a shared multicast stream + thin per-client framing:
+
+        shared   : union gids (delta-coded ids) + encoded attribute rows
+        per-client: cut add/remove ids + sync header  (unchanged)
+
+    A client filters the shared stream by itself: it knows its render cut
+    (`cut_add`/`cut_remove` ids) and its own store, so its Δ membership
+    (`needed & ~has`) is locally computable — no per-client row index list
+    is ever transmitted. Shared-stream bytes therefore grow with the number
+    of *unique* Gaussians in the sync, not with B.
+
+`manager.batched_wire_bytes(..., shared_payload=True)` holds the byte
+accounting for this format (each shared row's cost split across its
+requesters, so per-client stats still sum to fleet totals).
+
+The single-client `core.pipeline` path keeps the old unicast wire format via
+`compression.encode_rows` (same gather + codec helper, B=1, no union
+stream).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as comp
+from repro.core import lod_search as ls
+from repro.core.gaussians import Gaussians
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaBatch:
+    """One sync's encode-once fleet payload.
+
+    union_gids: (U,) int32 — ascending global ids of the fleet-union Δcut,
+                -1 padded (U is the static union budget)
+    n_union:    () int32 — real union size (== unique Gaussians this sync)
+    payload:    EncodedGaussians with U rows — the codec ran ONCE, on the
+                union; rows past n_union are padding (never referenced)
+    ref_mask:   (B, U) bool — client b's Δcut = union rows where ref_mask[b]
+    overflow:   () bool — union exceeded the budget (payload truncated)
+    """
+
+    union_gids: jax.Array
+    n_union: jax.Array
+    payload: comp.EncodedGaussians
+    ref_mask: jax.Array
+    overflow: jax.Array
+
+    @property
+    def n_clients(self) -> int:
+        return self.ref_mask.shape[0]
+
+
+@jax.jit
+def _union_mask(delta_masks: jax.Array):
+    union = jnp.any(delta_masks, axis=0)               # (N,)
+    return union, union.sum().astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _union_refs(delta_masks: jax.Array, union: jax.Array, width: int):
+    (gids,) = jnp.nonzero(union, size=width, fill_value=-1)
+    gids = gids.astype(jnp.int32)
+    ref = delta_masks[:, jnp.clip(gids, 0)] & (gids >= 0)[None, :]
+    return gids, ref
+
+
+def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
+                      delta_masks: jax.Array, budget: int) -> DeltaBatch:
+    """Encode one sync's fleet Δcut once.
+
+    delta_masks: (B, N) bool — the batched `SyncPlan.delta_data`.
+    budget: static cap on the encoded stream (rows). Correctness requires
+    budget >= the true union size; `overflow` flags truncation.
+
+    The encode width is pow2-bucketed on the ACTUAL union size (one scalar
+    await — the same bounded-recompilation pattern as the pooled stale-slab
+    scheduler), so codec quantize/pack FLOPs track the sync's unique
+    Gaussians, not the static budget: a steady-state sync with a tiny union
+    encodes a tiny bucket, never the whole budget."""
+    union, n_union = _union_mask(delta_masks)
+    n = int(jax.device_get(n_union))
+    width = ls.pow2_bucket(n, budget)
+    gids, ref = _union_refs(delta_masks, union, width)
+    payload = comp.encode_rows(codec, gaussians, gids)
+    return DeltaBatch(union_gids=gids, n_union=n_union, payload=payload,
+                      ref_mask=ref, overflow=n_union > jnp.int32(width))
+
+
+def decode_client(codec: comp.Codec, batch: DeltaBatch, sh_k: int,
+                  client: int) -> Tuple[jax.Array, Gaussians]:
+    """One client's decoded Δcut from the shared stream.
+
+    Returns (ids (U,) int32 — this client's gids, -1 where the union row is
+    not referenced — and the decoded union rows (U,)). Scattering rows where
+    ids >= 0 into the client store reproduces the encode-per-client path
+    bit-for-bit (the codec is row-wise deterministic and union rows keep
+    ascending-gid order)."""
+    dec = comp.decode(codec, batch.payload, sh_k)
+    ids = jnp.where(batch.ref_mask[client], batch.union_gids, -1)
+    return ids, dec
+
+
+def encode_per_client(gaussians: Gaussians, codec: comp.Codec,
+                      delta_masks: jax.Array, budget: int):
+    """Reference path: encode every client's Δcut independently (B codec
+    calls). Returns per-client (ids (budget,) int32 -1 padded ascending,
+    EncodedGaussians). Exists as the baseline the dedup path is proven
+    against — and as the measuring stick for `dedup_bytes_saved`."""
+    out = []
+    for b in range(delta_masks.shape[0]):
+        (ids,) = jnp.nonzero(delta_masks[b], size=budget, fill_value=-1)
+        ids = ids.astype(jnp.int32)
+        out.append((ids, comp.encode_rows(codec, gaussians, ids)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dedup accounting
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def first_owner_counts(delta_masks: jax.Array) -> jax.Array:
+    """(B,) int32 — per client, the number of its Δ rows for which it is the
+    fleet's *first* requester (lowest client index). Partitions the union:
+    `first_owner_counts(m).sum() == unique Gaussians this sync` — the
+    `ServiceStats.unique_delta` column."""
+    first = delta_masks & (jnp.cumsum(delta_masks, axis=0) == 1)
+    return first.sum(axis=1).astype(jnp.int32)

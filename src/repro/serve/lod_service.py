@@ -17,28 +17,40 @@ half from one headset to B concurrent headsets against ONE shared city tree:
   * `service_sync_vmapped` runs the per-frame temporal LoD search vmapped
     across clients: one fused device program, bit-identical per client to the
     sequential single-client search;
-  * `service_sync_pooled` is the host-driven scheduler: the cheap exact
+  * `service_sync_pooled` is the production scheduler: the cheap exact
     top-tree sweep + staleness predicate runs vmapped for all clients, then
     the *stale (client, slab) pairs of every client are pooled into one
-    power-of-two bucket* and swept by a single
-    `lod_search.sweep_slab_camera_pairs` dispatch (each pair carries its own
-    camera). This extends `temporal_search_hybrid` across clients: wall-clock
-    cost scales with TOTAL staleness in the fleet, not with client count — a
-    fleet of mostly-still headsets costs almost nothing beyond the top
-    sweeps.
+    power-of-two bucket* and swept by a single dispatch (each pair carries
+    its own camera and τ). Pooling, compaction, and the pair gather all run
+    ON DEVICE — the only host transfers on the steady-state path are two
+    scalars, the stale-pool size and the Δ-union size, each picking a
+    static pow2 bucket (bounded recompilation); the staleness and Δ masks
+    themselves never leave the device. Wall-clock cost scales with TOTAL
+    staleness in the fleet, not with client count;
+  * the sync tail is **encode-once** (`repro.serve.delta_path`): the
+    fleet-union Δcut is quantized/packed by ONE batched codec call and
+    fanned out as (union-offset, mask) references, so downlink bytes and
+    cloud encode FLOPs grow with the fleet's *unique* Gaussians, not with B
+    — co-located viewers are nearly free.
 
-Per-sync, per-client byte and work accounting (`ServiceStats`) feeds
-benchmarks/bench_multiclient.py (the multi-user analog of the paper's
-bandwidth figures). Follow-ons tracked in ROADMAP.md: cross-client Δcut
-payload dedup (overlapping viewers request the same Gaussians) and
-client-side Pallas stereo batching.
+Scheduling is double-buffered by construction: every sync is dispatched
+asynchronously and only the bucket-size scalars are awaited, so while the
+host schedules the pooled slab sweep of sync t the device is still executing
+the management-table update + encode of sync t−1 (see
+`service_sync_pooled`).
+
+Per-sync, per-client byte and work accounting (`ServiceStats`, now including
+`unique_delta` / `dedup_bytes_saved`) feeds benchmarks/bench_multiclient.py
+and benchmarks/bench_fleet_sync.py (the multi-user analogs of the paper's
+bandwidth figures). Remaining follow-ons tracked in ROADMAP.md: sharding
+`ServiceState`/tree on the cloud mesh, runtime client admission/eviction.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +62,8 @@ from repro.core import manager as mgr
 from repro.core.gaussians import Gaussians
 from repro.core.lod_tree import LodTree
 from repro.core.pipeline import SessionConfig, session_wire_format
+from repro.kernels import lod_cut as lc
+from repro.serve import delta_path as dp
 from repro import render as rnd
 
 
@@ -74,12 +88,23 @@ class ServiceStats:
     """Per-client accounting for one service sync (all leaves (B,))."""
 
     cut_size: jax.Array        # int32 — render-queue size
-    delta_size: jax.Array      # int32 — Δcut Gaussians shipped
+    delta_size: jax.Array      # int32 — Δcut Gaussians shipped to the client
+    unique_delta: jax.Array    # int32 — Δ rows this client contributed to the
+    #                            fleet union (first requester); sums to the
+    #                            union size across clients
     sync_bytes: jax.Array      # float32 — downlink bytes (payload + ids)
+    dedup_bytes_saved: jax.Array  # float32 — unicast-path bytes minus
+    #                            encode-once bytes (0 when dedup is off;
+    #                            slightly NEGATIVE for a sole requester —
+    #                            the shared stream carries explicit union
+    #                            ids the unicast format left implicit)
     nodes_touched: jax.Array   # int32 — LoD-search work attributed to client
     resweeps: jax.Array        # int32 — stale subtrees swept
     client_resident: jax.Array  # int32 — client store occupancy after sync
     overflow: jax.Array        # bool — cut exceeded cut_budget (queue truncated)
+    delta_overflow: jax.Array  # bool — fleet Δ-union exceeded delta_budget
+    #                            (encode-once payload truncated; always False
+    #                            with dedup off or the default budget)
 
 
 def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int
@@ -106,24 +131,51 @@ def _batched_cut_gids(masks: jax.Array, budget: int):
 def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
                  temporal: ls.TemporalState, masks: jax.Array,
                  nodes_touched: jax.Array, resweeps: jax.Array,
-                 bytes_per_g: float) -> Tuple[ServiceState, ServiceStats]:
+                 bytes_per_g: float, codec: Optional[comp.Codec] = None,
+                 dedup: bool = False, delta_budget: Optional[int] = None
+                 ) -> Tuple[ServiceState, ServiceStats,
+                            Optional[dp.DeltaBatch]]:
     """Shared tail of both sync paths: batched management-table update,
-    per-client render queues, and accounting."""
+    per-client render queues, the encode-once Δcut payload, and accounting.
+
+    With `dedup`, the wire format is the shared multicast stream of
+    repro.serve.delta_path (one codec call on the fleet union; `sync_bytes`
+    uses the shared-payload split) and the built `DeltaBatch` is returned;
+    otherwise the legacy per-client unicast accounting applies and the third
+    element is None."""
     new_mgr, plan = mgr.batched_cloud_sync(state.mgr, masks, state.sync_index,
                                            jnp.int32(cfg.w_star))
     gids, counts = _batched_cut_gids(masks, cfg.cut_budget)
+    unicast = mgr.batched_wire_bytes(plan, bytes_per_g)
+    batch = None
+    if dedup:
+        if codec is None or delta_budget is None:
+            raise ValueError("dedup sync needs a codec and a delta_budget")
+        batch = dp.build_delta_batch(tree.gaussians, codec, plan.delta_data,
+                                     delta_budget)
+        sync_bytes = mgr.batched_wire_bytes(plan, bytes_per_g,
+                                            shared_payload=True)
+        saved = unicast - sync_bytes
+        delta_overflow = jnp.broadcast_to(batch.overflow, counts.shape)
+    else:
+        sync_bytes = unicast
+        saved = jnp.zeros_like(unicast)
+        delta_overflow = jnp.zeros(counts.shape, bool)
     new_state = ServiceState(
         mgr=new_mgr, temporal=temporal, cut_gids=gids,
         sync_index=state.sync_index + 1)
     stats = ServiceStats(
         cut_size=counts,
         delta_size=plan.n_delta,
-        sync_bytes=mgr.batched_wire_bytes(plan, bytes_per_g),
+        unique_delta=dp.first_owner_counts(plan.delta_data),
+        sync_bytes=sync_bytes,
+        dedup_bytes_saved=saved,
         nodes_touched=nodes_touched.astype(jnp.int32),
         resweeps=resweeps.astype(jnp.int32),
         client_resident=plan.n_resident,
-        overflow=counts > cfg.cut_budget)
-    return new_state, stats
+        overflow=counts > cfg.cut_budget,
+        delta_overflow=delta_overflow)
+    return new_state, stats, batch
 
 
 def _fleet_taus(cfg: SessionConfig, n_clients: int, taus) -> jnp.ndarray:
@@ -139,13 +191,18 @@ def _fleet_taus(cfg: SessionConfig, n_clients: int, taus) -> jnp.ndarray:
 
 def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
                          state: ServiceState, cam_positions, focal,
-                         bytes_per_g: float, taus=None
-                         ) -> Tuple[ServiceState, ServiceStats]:
+                         bytes_per_g: float, taus=None,
+                         codec: Optional[comp.Codec] = None,
+                         dedup: bool = False,
+                         delta_budget: Optional[int] = None
+                         ) -> Tuple[ServiceState, ServiceStats,
+                                    Optional[dp.DeltaBatch]]:
     """One LoD sync for every client, fully on-device (vmapped search).
 
     Exactness reference for the pooled scheduler; also the right path when
     nearly everything is stale (e.g. the fleet's first frame). `taus` is an
-    optional (B,) per-client foveated threshold vector."""
+    optional (B,) per-client foveated threshold vector; `dedup` switches the
+    sync tail to the encode-once fleet wire format (see `_finish_sync`)."""
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     cut, temporal = ls.batched_temporal_search(
@@ -153,7 +210,8 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks,
                         cut.nodes_touched, cut.resweep.sum(axis=1),
-                        bytes_per_g)
+                        bytes_per_g, codec=codec, dedup=dedup,
+                        delta_budget=delta_budget)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
@@ -167,17 +225,75 @@ def _apply_pooled_updates(slab_cut, root_expand, rho, cam0, sel_b, sel_s,
             cam0.at[sel_b, sel_s].set(cam_sel))
 
 
+@functools.partial(jax.jit, static_argnames=("bucket",))
+def _compact_stale_pairs(stale: jax.Array, bucket: int):
+    """On-device compaction of the (B, Ns) staleness mask into a static
+    power-of-two bucket of (client, slab) indices.
+
+    Replaces the old host `np.nonzero(stale)` round-trip: the cumsum-based
+    `jnp.nonzero(..., size=bucket)` runs inside the program, and the bucket
+    is repeat-padded with earlier stale pairs (idx[i mod count], exactly the
+    old `np.resize` cycle) so padded lanes rewrite identical values. Only
+    the static `bucket` size — chosen from the pool-size scalar — crosses to
+    the host."""
+    ns = stale.shape[1]
+    flat = stale.reshape(-1)
+    count = flat.sum()
+    (idx,) = jnp.nonzero(flat, size=bucket, fill_value=0)
+    sel = idx[jnp.arange(bucket) % jnp.maximum(count, 1)]
+    return sel // ns, sel % ns
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_depth", "impl", "interpret"))
+def _pooled_pair_sweep(tables: ls.SlabTables, rpe, cams, taus, sel_b, sel_s,
+                       focal, *, max_depth: int, impl: str, interpret: bool):
+    """Gather the pooled pairs' slab attributes from the device-resident
+    tables and sweep them — ONE fused program (the gathers never detour
+    through the host). `impl` picks the vmapped XLA sweep or the Pallas
+    lod-cut kernel (`repro.kernels.lod_cut.lod_pair_sweep_pallas`)."""
+    args = (tables.mu[sel_s], tables.size[sel_s], tables.parent[sel_s],
+            tables.level[sel_s], tables.is_leaf[sel_s], tables.valid[sel_s],
+            rpe[sel_b, sel_s], cams[sel_b])
+    if impl == "pallas":
+        return lc.lod_pair_sweep_pallas(*args, focal, taus[sel_b],
+                                        max_depth=max_depth,
+                                        interpret=interpret)
+    return ls.sweep_slab_camera_pairs(*args, focal, taus[sel_b], max_depth)
+
+
 def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         state: ServiceState, cam_positions, focal,
-                        bytes_per_g: float, taus=None
-                        ) -> Tuple[ServiceState, ServiceStats]:
+                        bytes_per_g: float, taus=None,
+                        codec: Optional[comp.Codec] = None,
+                        dedup: bool = False,
+                        delta_budget: Optional[int] = None,
+                        tables: Optional[ls.SlabTables] = None,
+                        sweep_impl: str = "xla", interpret: bool = True
+                        ) -> Tuple[ServiceState, ServiceStats,
+                                   Optional[dp.DeltaBatch]]:
     """One LoD sync for every client with cross-client slab pooling.
 
-    Host-driven (the batched analog of `temporal_search_hybrid`): gather the
-    stale (client, slab) pairs of ALL clients, round the pool up to a
-    power-of-two bucket (bounded recompilation), sweep it in one dispatch —
-    each pair with its own camera — and scatter back. Bit-identical results
-    to `service_sync_vmapped`.
+    The batched analog of `temporal_search_hybrid`, now device-scheduled:
+    the vmapped top sweep marks every client's stale slabs, the (client,
+    slab) pool is compacted ON DEVICE into a power-of-two bucket (bounded
+    recompilation), and one dispatch sweeps the bucket — each pair with its
+    own camera and τ — before scattering back. Bit-identical results to
+    `service_sync_vmapped`.
+
+    Host involvement per sync is scalar reads only (the pool size here —
+    plus, with dedup, the Δ-union size in the sync tail — each selecting a
+    static bucket); the staleness mask stays on device. Because
+    everything else is dispatched asynchronously, the sweep of sync t is
+    being scheduled while the device still executes the management-table
+    update / encode tail of sync t−1 — the double-buffered pipeline the
+    ROADMAP asked for.
+
+    `tables` are the device-resident slab attribute tables
+    (`ls.SlabTables.from_tree`); pass them from a long-lived service so the
+    per-sync program starts at the pair gather instead of re-deriving the
+    slab views. `sweep_impl` = "xla" | "pallas" picks the bucket sweep
+    implementation (bit-parity tested).
 
     NOTE: like `temporal_search_hybrid`, the scatter donates the incoming
     `state.temporal` buffers (no (B, Ns, S) re-copy per sync). On backends
@@ -186,28 +302,23 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     m = tree.meta
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
+    if tables is None:
+        tables = ls.SlabTables.from_tree(tree)
     top_cut, rpe, stale = ls.batched_top_and_staleness(
         tree, state.temporal, cams, jnp.float32(focal), tau_b)
-    stale_np = np.asarray(stale)
-    b_idx, s_idx = np.nonzero(stale_np)
-    n_stale = len(b_idx)
+    # the ONE host synchronization of the sync: the pool-size scalar
+    n_stale = int(jax.device_get(stale.sum()))
+    n_pairs = stale.shape[0] * stale.shape[1]
 
     tp = state.temporal
     slab_cut, root_expand, rho, cam0 = (tp.slab_cut0, tp.root_expand0,
                                         tp.rho, tp.cam0)
     if n_stale > 0:
-        n_pairs = stale_np.size
-        bucket = 1 << int(np.ceil(np.log2(max(n_stale, 1))))
-        bucket = min(bucket, n_pairs)
-        pad = np.resize(np.arange(n_stale), bucket)  # repeat-pad the pool
-        sel_b = jnp.asarray(b_idx[pad])
-        sel_s = jnp.asarray(s_idx[pad])
-        f_cut, f_rexp, f_rho = ls.sweep_slab_camera_pairs(
-            tree.slab_mu()[sel_s], tree.slab_size()[sel_s],
-            tree.slab_parent[sel_s], tree.slab_level[sel_s],
-            tree.slab_is_leaf[sel_s], tree.slab_valid[sel_s],
-            rpe[sel_b, sel_s], cams[sel_b],
-            jnp.float32(focal), tau_b[sel_b], m.slab_max_depth)
+        bucket = ls.pow2_bucket(n_stale, n_pairs)
+        sel_b, sel_s = _compact_stale_pairs(stale, bucket)
+        f_cut, f_rexp, f_rho = _pooled_pair_sweep(
+            tables, rpe, cams, tau_b, sel_b, sel_s, jnp.float32(focal),
+            max_depth=m.slab_max_depth, impl=sweep_impl, interpret=interpret)
         slab_cut, root_expand, rho, cam0 = _apply_pooled_updates(
             slab_cut, root_expand, rho, cam0, sel_b, sel_s,
             f_cut, f_rexp, f_rho, cams[sel_b])
@@ -222,7 +333,8 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                        nodes_touched=nodes_touched)
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks, nodes_touched,
-                        stale.sum(axis=1), bytes_per_g)
+                        stale.sum(axis=1), bytes_per_g, codec=codec,
+                        dedup=dedup, delta_budget=delta_budget)
 
 
 # ---------------------------------------------------------------------------
@@ -260,41 +372,127 @@ class LodService:
     """Thin stateful wrapper: one shared tree/codec, B client sessions.
 
     `sync(cam_positions)` advances every client by one LoD sync and returns
-    per-client `ServiceStats`. `mode` picks the scheduler: "pooled"
-    (cross-client bucketed hybrid — the production path) or "vmapped"
-    (always-sweep exactness reference). `taus` optionally gives every client
+    per-client `ServiceStats`; the encode-once fleet payload of the latest
+    sync is kept on `last_delta` (`client_delta(i)` decodes one client's
+    slice). `mode` picks the scheduler: "pooled" (cross-client bucketed
+    hybrid, device-compacted — the production path) or "vmapped"
+    (always-sweep exactness reference). `sweep_impl` selects the pooled
+    bucket sweep: "xla" (vmapped) or "pallas"
+    (`repro.kernels.lod_cut.lod_pair_sweep_pallas`; `interpret=True` is the
+    CPU default — set False on real TPUs). `dedup` toggles the encode-once
+    wire format (on by default; `dedup=False` restores per-client unicast
+    accounting and skips the codec). `taus` optionally gives every client
     its own foveated LoD threshold (B,). `render_fallback(rigs)` rasterizes
-    every client's current queue cloud-side in one batched dispatch."""
+    every client's current queue cloud-side in one batched dispatch, with
+    the static `RenderConfig` and stacked-rig pytree cached per rig
+    signature."""
 
     def __init__(self, tree: LodTree, cfg: SessionConfig, n_clients: int,
-                 focal: float, mode: str = "pooled", taus=None):
+                 focal: float, mode: str = "pooled", taus=None,
+                 dedup: bool = True, sweep_impl: str = "xla",
+                 interpret: bool = True,
+                 delta_budget: Optional[int] = None):
         if mode not in ("pooled", "vmapped"):
             raise ValueError(f"unknown scheduler mode: {mode!r}")
+        if sweep_impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown sweep_impl: {sweep_impl!r}")
+        if sweep_impl == "pallas" and mode != "pooled":
+            raise ValueError("sweep_impl='pallas' drives the pooled bucket "
+                             "sweep; use mode='pooled'")
         self.tree = tree
         self.cfg = cfg
         self.n_clients = n_clients
         self.focal = float(focal)
         self.mode = mode
+        self.sweep_impl = sweep_impl
+        self.interpret = bool(interpret)
+        self.dedup = bool(dedup)
         # validate eagerly (shared with the sync-time path)
         self.taus = (None if taus is None
                      else np.asarray(_fleet_taus(cfg, n_clients, taus)))
         self.codec, self.bytes_per_g = session_wire_format(tree, cfg)
+        # static union capacity of the encode-once stream: every client's
+        # Δcut is bounded by its cut budget, so the fleet union is bounded by
+        # min(B * cut_budget, N)
+        self.delta_budget = (int(delta_budget) if delta_budget is not None
+                             else min(tree.n_pad, cfg.cut_budget * n_clients))
+        # device-resident slab tables: gathered once, reused by every pooled
+        # sweep (the per-sync program starts at the pair gather); the
+        # vmapped reference path never reads them, so don't hold the copy
+        self.tables = (ls.SlabTables.from_tree(tree) if mode == "pooled"
+                       else None)
         self.state = service_init(tree, cfg, n_clients)
+        self.last_delta: Optional[dp.DeltaBatch] = None
+        self._rcfg_cache = {}
+        self._stack_cache = {}
 
     def sync(self, cam_positions) -> ServiceStats:
+        """One fleet sync. Returns device-resident per-client stats — they
+        are NOT forced here, so back-to-back `sync` calls pipeline: the host
+        dispatches sync t while the device finishes the table update and
+        encode tail of sync t−1 (the only awaits per sync are the pooled
+        scheduler's and the encoder's bucket-size scalars)."""
         cams = np.asarray(cam_positions, np.float32)
         if cams.shape != (self.n_clients, 3):
             raise ValueError(f"expected ({self.n_clients}, 3) camera "
                              f"positions, got {cams.shape}")
-        step = (service_sync_pooled if self.mode == "pooled"
-                else service_sync_vmapped)
-        self.state, stats = step(self.tree, self.cfg, self.state, cams,
-                                 self.focal, self.bytes_per_g, taus=self.taus)
+        kw = dict(taus=self.taus, codec=self.codec, dedup=self.dedup,
+                  delta_budget=self.delta_budget)
+        if self.mode == "pooled":
+            self.state, stats, batch = service_sync_pooled(
+                self.tree, self.cfg, self.state, cams, self.focal,
+                self.bytes_per_g, tables=self.tables,
+                sweep_impl=self.sweep_impl, interpret=self.interpret, **kw)
+        else:
+            self.state, stats, batch = service_sync_vmapped(
+                self.tree, self.cfg, self.state, cams, self.focal,
+                self.bytes_per_g, **kw)
+        if batch is not None:
+            self.last_delta = batch
         return stats
 
     def client_cut(self, client: int) -> jax.Array:
         """(cut_budget,) int32 render-queue ids of one client (-1 padded)."""
         return self.state.cut_gids[client]
+
+    def client_delta(self, client: int):
+        """Decode one client's Δcut slice of the latest encode-once payload:
+        (ids (U,) int32 — -1 where the union row is not this client's — and
+        the decoded union rows). Bitwise what the encode-per-client path
+        would have delivered (tests/test_delta_path.py)."""
+        if self.last_delta is None:
+            raise ValueError("no sync performed yet (or dedup=False)")
+        return dp.decode_client(self.codec, self.last_delta,
+                                self.tree.gaussians.sh.shape[1], client)
+
+    # -- fallback rendering ---------------------------------------------------
+
+    def _fleet_render_config(self, rigs, tile, list_len, max_pairs):
+        """Per-signature cache of the static RenderConfig + stacked rigs.
+
+        Rebuilding the (frozen, hashable) RenderConfig each call re-traces
+        nothing by itself, but `for_fleet` + `stack_rigs` walk every rig on
+        the host per frame; repeated fleet renders (the steady state of the
+        fallback tier) hit the caches instead. The stack cache keys on rig
+        identity and pins the rig objects, so a hit can only mean the exact
+        same rig pytrees."""
+        static_sig = (tuple((r.left.width, r.left.height, float(r.left.focal),
+                             r.left.near, r.left.far, r.baseline)
+                            for r in rigs), tile, list_len, max_pairs)
+        rcfg = self._rcfg_cache.get(static_sig)
+        if rcfg is None:
+            rcfg = rnd.RenderConfig.for_fleet(rigs, tile=tile,
+                                              list_len=list_len,
+                                              max_pairs=max_pairs)
+            self._rcfg_cache[static_sig] = rcfg
+        stack_key = tuple(id(r) for r in rigs)
+        hit = self._stack_cache.get(stack_key)
+        if hit is None:
+            if len(self._stack_cache) >= 8:   # bound the pinned rigs
+                self._stack_cache.clear()
+            hit = (list(rigs), rnd.stack_rigs(rigs))
+            self._stack_cache[stack_key] = hit
+        return rcfg, hit[1]
 
     def render_fallback(self, rigs, *, tile: int = 16, list_len: int = 256,
                         max_pairs: int = 1 << 16, path: str = "vmap",
@@ -302,19 +500,25 @@ class LodService:
         """Fleet render of all B clients' queues → (img_l, img_r, stats).
 
         `rigs` is a list of B StereoRigs (shared resolution/baseline) or an
-        already-stacked rig pytree."""
+        already-stacked rig pytree. The derived static `RenderConfig` (and,
+        for rig lists, the stacked pytree) is cached per rig signature so
+        repeated fleet renders skip the per-call host rebuild."""
         if isinstance(rigs, (list, tuple)):
-            rcfg = rnd.RenderConfig.for_fleet(rigs, tile=tile,
-                                              list_len=list_len,
-                                              max_pairs=max_pairs)
-            rigs = rnd.stack_rigs(rigs)
+            rcfg, rigs = self._fleet_render_config(list(rigs), tile,
+                                                  list_len, max_pairs)
         else:
             from repro.core.stereo import n_categories
-            max_disp = (float(jnp.max(rigs.left.focal)) * rigs.baseline
-                        / rigs.left.near)
-            rcfg = rnd.RenderConfig(
-                width=rigs.left.width, height=rigs.left.height, tile=tile,
-                list_len=list_len, max_pairs=max_pairs,
-                n_cat=n_categories(max_disp, tile))
+            focal = float(np.max(np.asarray(rigs.left.focal)))
+            static_sig = (rigs.left.width, rigs.left.height, focal,
+                          rigs.left.near, rigs.baseline, tile, list_len,
+                          max_pairs)
+            rcfg = self._rcfg_cache.get(static_sig)
+            if rcfg is None:
+                max_disp = focal * rigs.baseline / rigs.left.near
+                rcfg = rnd.RenderConfig(
+                    width=rigs.left.width, height=rigs.left.height, tile=tile,
+                    list_len=list_len, max_pairs=max_pairs,
+                    n_cat=n_categories(max_disp, tile))
+                self._rcfg_cache[static_sig] = rcfg
         return service_render_step(self.tree, self.state, rigs, rcfg,
                                    path=path, interpret=interpret)

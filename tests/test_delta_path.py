@@ -1,0 +1,200 @@
+"""Encode-once fleet Δcut dedup (repro.serve.delta_path): per-client decoded
+payloads must be bitwise identical to the encode-per-client path across
+overlap factors and ragged per-client Δ sizes, codec work must be one batched
+encode per sync, and fleet bytes must grow with unique Gaussians, not B."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import compression as comp
+from repro.core.pipeline import SessionConfig, session_wire_format
+from repro.serve import delta_path as dp
+from repro.serve import lod_service as svc
+
+FOCAL = 1400.0
+TAU = 32.0
+
+
+def _masks_for_overlap(n: int, b: int, overlap: float, rng,
+                       sizes=(600, 350, 150)) -> np.ndarray:
+    """(B, N) bool Δ masks with a controlled shared fraction and RAGGED
+    per-client sizes (client i requests sizes[i % len] rows, of which
+    ~overlap are drawn from one shared pool)."""
+    masks = np.zeros((b, n), bool)
+    pool = rng.permutation(n)
+    shared_pool = pool[: n // 2]
+    private_pool = pool[n // 2 :]
+    p_off = 0
+    for i in range(b):
+        k = sizes[i % len(sizes)]
+        k_shared = int(round(k * overlap))
+        own = shared_pool[:k_shared].tolist()
+        own += private_pool[p_off : p_off + (k - k_shared)].tolist()
+        p_off += k - k_shared
+        masks[i, own] = True
+    return masks
+
+
+@pytest.mark.parametrize("overlap", [0.0, 0.5, 1.0])
+def test_dedup_decode_bitwise_matches_per_client(small_tree, overlap):
+    rng = np.random.default_rng(11)
+    b, n = 3, small_tree.n_pad
+    sizes = (600, 600, 600) if overlap == 1.0 else (600, 350, 150)
+    if overlap == 1.0:  # identical masks: the fully co-located sync
+        one = _masks_for_overlap(n, 1, 1.0, rng, sizes=(600,))
+        masks = np.repeat(one, b, axis=0)
+    else:
+        masks = _masks_for_overlap(n, b, overlap, rng, sizes=sizes)
+    codec, _ = session_wire_format(small_tree, SessionConfig(tau=TAU))
+    sh_k = small_tree.gaussians.sh.shape[1]
+    budget = int(masks.any(axis=0).sum()) + 32
+
+    batch = dp.build_delta_batch(small_tree.gaussians, codec,
+                                 jnp.asarray(masks), budget)
+    assert not bool(batch.overflow)
+    assert int(batch.n_union) == int(masks.any(axis=0).sum())
+    ref = dp.encode_per_client(small_tree.gaussians, codec,
+                               jnp.asarray(masks), budget)
+
+    for i in range(b):
+        ids_u, dec_u = dp.decode_client(codec, batch, sh_k, i)
+        ids_u = np.asarray(ids_u)
+        sel_u = ids_u >= 0
+        ids_r, enc_r = ref[i]
+        ids_r = np.asarray(ids_r)
+        sel_r = ids_r >= 0
+        # same rows, same ascending-gid order
+        np.testing.assert_array_equal(ids_u[sel_u], ids_r[sel_r], err_msg=str(i))
+        # encoded representation: union rows referenced by this client vs its
+        # own unicast stream — bitwise equal, field by field
+        enc_u = batch.payload
+        for field in ("dc", "code", "pos_q", "scale_q", "quat_q", "opa_q"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(enc_u, field))[sel_u],
+                np.asarray(getattr(enc_r, field))[sel_r],
+                err_msg=f"client {i} field {field}")
+        # and so is the decode the client store would ingest
+        dec_r = comp.decode(codec, enc_r, sh_k)
+        for field in ("mu", "log_scale", "quat", "opacity", "sh"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(dec_u, field))[sel_u],
+                np.asarray(getattr(dec_r, field))[sel_r],
+                err_msg=f"client {i} field {field}")
+
+
+def test_all_clients_idle_sync(small_tree):
+    """The all-idle sync (no client needs anything) must produce an empty,
+    well-formed batch."""
+    codec, _ = session_wire_format(small_tree, SessionConfig(tau=TAU))
+    masks = jnp.zeros((4, small_tree.n_pad), bool)
+    batch = dp.build_delta_batch(small_tree.gaussians, codec, masks, 64)
+    assert int(batch.n_union) == 0
+    assert not bool(batch.overflow)
+    assert not np.asarray(batch.ref_mask).any()
+    ids, _dec = dp.decode_client(codec, batch,
+                                 small_tree.gaussians.sh.shape[1], 2)
+    assert (np.asarray(ids) == -1).all()
+    assert np.asarray(dp.first_owner_counts(masks)).sum() == 0
+
+
+def test_union_overflow_flagged(small_tree):
+    rng = np.random.default_rng(3)
+    masks = _masks_for_overlap(small_tree.n_pad, 2, 0.0, rng,
+                               sizes=(100, 80))
+    codec, _ = session_wire_format(small_tree, SessionConfig(tau=TAU))
+    batch = dp.build_delta_batch(small_tree.gaussians, codec,
+                                 jnp.asarray(masks), 64)
+    assert bool(batch.overflow)
+
+
+def test_first_owner_counts_partition_union(small_tree):
+    rng = np.random.default_rng(5)
+    masks = _masks_for_overlap(small_tree.n_pad, 4, 0.5, rng)
+    u = np.asarray(dp.first_owner_counts(jnp.asarray(masks)))
+    assert u.sum() == masks.any(axis=0).sum()
+    assert (u <= masks.sum(axis=1)).all()
+
+
+# -- service-level: one codec call per sync, bytes grow with unique ----------
+
+
+def _count_encodes(monkeypatch):
+    calls = {"n": 0}
+    real = comp.encode
+
+    def counting_encode(codec, g):
+        calls["n"] += 1
+        return real(codec, g)
+
+    monkeypatch.setattr(comp, "encode", counting_encode)
+    return calls
+
+
+def test_service_encodes_once_per_sync(small_tree, monkeypatch):
+    """B co-located clients: the dedup service runs the codec ONCE per sync;
+    the per-client reference path runs it B times."""
+    b = 6
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.broadcast_to(np.asarray([40.0, 40.0, 2.0], np.float32),
+                           (b, 3)).copy()
+    service = svc.LodService(small_tree, cfg, b, focal=FOCAL, mode="pooled",
+                             dedup=True)
+    calls = _count_encodes(monkeypatch)
+    service.sync(cams)
+    assert calls["n"] == 1
+    service.sync(cams + 1.0)
+    assert calls["n"] == 2  # still one per sync, B-independent
+
+    masks = np.asarray(service.state.mgr.cut_prev)
+    calls["n"] = 0
+    dp.encode_per_client(small_tree.gaussians, service.codec,
+                         jnp.asarray(masks), 256)
+    assert calls["n"] == b
+
+    off = svc.LodService(small_tree, cfg, b, focal=FOCAL, mode="pooled",
+                         dedup=False)
+    calls["n"] = 0
+    off.sync(cams)
+    assert calls["n"] == 0  # unicast accounting path never touches the codec
+
+
+def test_colocated_fleet_bytes_grow_with_unique_not_b(small_tree):
+    """Identical cameras: fleet downlink = one shared payload + B thin
+    framings — total sync_bytes for B clients must equal the single-client
+    total plus (B-1) framings, NOT B× the single-client total."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cam = np.asarray([[40.0, 40.0, 2.0]], np.float32)
+    b = 8
+
+    s1 = svc.LodService(small_tree, cfg, 1, focal=FOCAL, dedup=True)
+    st1 = s1.sync(cam)
+    sb = svc.LodService(small_tree, cfg, b, focal=FOCAL, dedup=True)
+    stb = sb.sync(np.repeat(cam, b, axis=0))
+
+    total1 = float(np.asarray(st1.sync_bytes).sum())
+    totalb = float(np.asarray(stb.sync_bytes).sum())
+    ids = float(np.asarray(st1.cut_size)[0])  # first sync: cut_add == cut
+    framing = ids * 2 + 64  # ID_BYTES_DELTA * ids + SYNC_HEADER_BYTES
+    assert np.isclose(totalb, total1 + (b - 1) * framing, rtol=1e-5), \
+        (totalb, total1, framing)
+    # payload part is O(unique): far below B x the unicast accounting
+    assert totalb < 0.35 * b * total1
+    assert int(np.asarray(stb.unique_delta).sum()) == int(sb.last_delta.n_union)
+    assert float(np.asarray(stb.dedup_bytes_saved).sum()) > 0.0
+
+
+def test_service_surfaces_delta_overflow(small_tree):
+    """A too-small delta_budget truncates the encode-once stream — the
+    service must surface that in ServiceStats, not just on last_delta."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [41.0, 40.0, 2.0]], np.float32)
+    tight = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                           delta_budget=64)
+    st = tight.sync(cams)
+    assert np.asarray(st.delta_overflow).all()
+    assert bool(tight.last_delta.overflow)
+    ok = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True)
+    st = ok.sync(cams)  # default budget bounds the union — never truncates
+    assert not np.asarray(st.delta_overflow).any()

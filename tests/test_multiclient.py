@@ -83,7 +83,7 @@ def test_pooled_scheduler_matches_sequential_hybrid(small_tree, b):
                                            small_tree.meta.S)
                   for _ in range(b)]
     for f in range(frames):
-        state, stats = svc.service_sync_pooled(
+        state, stats, _delta = svc.service_sync_pooled(
             small_tree, cfg, state, walks[f], FOCAL, bytes_per_g=30.0)
         for i in range(b):
             cut, seq_states[i] = ls.temporal_search_hybrid(
@@ -113,9 +113,9 @@ def test_pooled_matches_vmapped_service(small_tree):
     s_pool = svc.service_init(small_tree, cfg, b)
     s_vmap = svc.service_init(small_tree, cfg, b)
     for f in range(frames):
-        s_pool, st_p = svc.service_sync_pooled(
+        s_pool, st_p, _dp = svc.service_sync_pooled(
             small_tree, cfg, s_pool, walks[f], FOCAL, bytes_per_g=30.0)
-        s_vmap, st_v = svc.service_sync_vmapped(
+        s_vmap, st_v, _dv = svc.service_sync_vmapped(
             small_tree, cfg, s_vmap, walks[f], FOCAL, bytes_per_g=30.0)
         assert (np.asarray(s_pool.cut_gids) == np.asarray(s_vmap.cut_gids)).all()
         assert (np.asarray(st_p.sync_bytes) == np.asarray(st_v.sync_bytes)).all()
@@ -138,7 +138,7 @@ def test_service_manager_matches_reference_trace(small_tree):
     masks_per_client = [[] for _ in range(b)]
     stats_log = []
     for f in range(frames):
-        state, stats = svc.service_sync_pooled(
+        state, stats, _delta = svc.service_sync_pooled(
             small_tree, cfg, state, walks[f], FOCAL, bytes_per_g=30.0)
         stats_log.append(stats)
         for i in range(b):
@@ -152,6 +152,126 @@ def test_service_manager_matches_reference_trace(small_tree):
         for f in range(frames):
             assert int(stats_log[f].delta_size[i]) == deltas[f], (f, i)
             assert int(stats_log[f].client_resident[i]) == residents[f], (f, i)
+
+
+# -- (b2) on-device pooled scheduling + dedup + pallas sweep ------------------
+
+
+def test_pooled_issues_no_host_nonzero(small_tree, monkeypatch):
+    """The pooled scheduler must never pull the staleness mask to the host:
+    compaction happens on device (the old path called np.nonzero on it)."""
+    rng = np.random.default_rng(6)
+    b = 3
+    walks = _client_walks(rng, b, 5)
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    state = svc.service_init(small_tree, cfg, b)
+
+    real_nonzero = np.nonzero
+
+    def _guarded(a, *rest, **k):
+        # jax's tracer calls np.nonzero on small python lists internally;
+        # only a bool ARRAY argument can be the staleness mask
+        if getattr(a, "dtype", None) == np.bool_ and getattr(a, "ndim", 0):
+            raise AssertionError("host np.nonzero on the pooled sync path")
+        return real_nonzero(a, *rest, **k)
+
+    monkeypatch.setattr(svc.np, "nonzero", _guarded)
+    for f in range(5):
+        state, stats, _delta = svc.service_sync_pooled(
+            small_tree, cfg, state, walks[f], FOCAL, bytes_per_g=30.0)
+    assert int(np.asarray(stats.cut_size).sum()) > 0
+
+
+def test_pooled_dedup_matches_vmapped_dedup(small_tree):
+    """With the encode-once tail on, pooled and vmapped schedulers must agree
+    on the ENTIRE wire product: union gids, per-client references, encoded
+    payload, and the shared-payload byte accounting."""
+    rng = np.random.default_rng(7)
+    b, frames = 4, 6
+    walks = _client_walks(rng, b, frames)
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    codec, bpg = session_wire_format(small_tree, cfg)
+    budget = small_tree.n_pad
+    s_pool = svc.service_init(small_tree, cfg, b)
+    s_vmap = svc.service_init(small_tree, cfg, b)
+    for f in range(frames):
+        s_pool, st_p, d_p = svc.service_sync_pooled(
+            small_tree, cfg, s_pool, walks[f], FOCAL, bytes_per_g=bpg,
+            codec=codec, dedup=True, delta_budget=budget)
+        s_vmap, st_v, d_v = svc.service_sync_vmapped(
+            small_tree, cfg, s_vmap, walks[f], FOCAL, bytes_per_g=bpg,
+            codec=codec, dedup=True, delta_budget=budget)
+        assert (np.asarray(s_pool.cut_gids) == np.asarray(s_vmap.cut_gids)).all()
+        assert int(d_p.n_union) == int(d_v.n_union)
+        np.testing.assert_array_equal(np.asarray(d_p.union_gids),
+                                      np.asarray(d_v.union_gids))
+        np.testing.assert_array_equal(np.asarray(d_p.ref_mask),
+                                      np.asarray(d_v.ref_mask))
+        np.testing.assert_array_equal(np.asarray(d_p.payload.pos_q),
+                                      np.asarray(d_v.payload.pos_q))
+        np.testing.assert_array_equal(np.asarray(st_p.sync_bytes),
+                                      np.asarray(st_v.sync_bytes))
+        np.testing.assert_array_equal(np.asarray(st_p.unique_delta),
+                                      np.asarray(st_v.unique_delta))
+        np.testing.assert_array_equal(np.asarray(st_p.dedup_bytes_saved),
+                                      np.asarray(st_v.dedup_bytes_saved))
+        # union partition: first-owner counts sum to the union size
+        assert int(np.asarray(st_p.unique_delta).sum()) == int(d_p.n_union)
+
+
+def test_pallas_sweep_impl_bit_parity(small_tree):
+    """LodService(sweep_impl="pallas") — the Pallas lod-cut pair kernel wired
+    into the pooled bucket sweep — must be bit-identical to the XLA sweep
+    AND to the always-sweep vmapped reference, sync after sync (foveated τ
+    included)."""
+    rng = np.random.default_rng(8)
+    b, frames = 3, 6
+    walks = _client_walks(rng, b, frames)
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    taus = np.asarray([24.0, 48.0, 96.0], np.float32)
+    mk = lambda **kw: svc.LodService(small_tree, cfg, b, focal=FOCAL,
+                                     taus=taus, **kw)
+    s_pal = mk(mode="pooled", sweep_impl="pallas")
+    s_xla = mk(mode="pooled", sweep_impl="xla")
+    s_ref = mk(mode="vmapped")
+    for f in range(frames):
+        s_pal.sync(walks[f]); s_xla.sync(walks[f]); s_ref.sync(walks[f])
+        np.testing.assert_array_equal(np.asarray(s_pal.state.cut_gids),
+                                      np.asarray(s_xla.state.cut_gids),
+                                      err_msg=str(f))
+        np.testing.assert_array_equal(np.asarray(s_pal.state.cut_gids),
+                                      np.asarray(s_ref.state.cut_gids),
+                                      err_msg=str(f))
+        for name in ("slab_cut0", "rho", "cam0", "root_expand0"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(s_pal.state.temporal, name)),
+                np.asarray(getattr(s_xla.state.temporal, name)),
+                err_msg=f"{f} {name}")
+    with pytest.raises(ValueError):
+        mk(mode="vmapped", sweep_impl="pallas")
+
+
+def test_service_dedup_client_payload_roundtrip(small_tree):
+    """End-to-end service check: each client's decode of the shared stream
+    carries exactly its Δcut rows of this sync."""
+    rng = np.random.default_rng(9)
+    b = 3
+    walks = _client_walks(rng, b, 3)
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    service = svc.LodService(small_tree, cfg, b, focal=FOCAL, dedup=True)
+    prev_has = np.asarray(service.state.mgr.client_has).copy()
+    for f in range(3):
+        stats = service.sync(walks[f])
+        for i in range(b):
+            ids, _dec = service.client_delta(i)
+            got = np.sort(np.asarray(ids)[np.asarray(ids) >= 0])
+            gids = np.asarray(service.state.cut_gids[i])
+            cut = np.zeros(small_tree.n_pad, bool)
+            cut[gids[gids >= 0]] = True
+            want = np.where(cut & ~prev_has[i])[0]
+            np.testing.assert_array_equal(got, want, err_msg=f"{f}/{i}")
+            assert int(stats.delta_size[i]) == len(want)
+        prev_has = np.asarray(service.state.mgr.client_has).copy()
 
 
 # -- (c) functional session core ≡ legacy CollaborativeSession ----------------

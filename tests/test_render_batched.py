@@ -186,7 +186,7 @@ def test_foveated_tau_fewer_cut_nodes(small_tree):
     cams = np.asarray([[30, 30, 2], [30, 30, 2]], np.float32)
     taus = np.asarray([32.0, 96.0], np.float32)
     state = svc.service_init(small_tree, cfg, 2)
-    state, stats = svc.service_sync_vmapped(
+    state, stats, _delta = svc.service_sync_vmapped(
         small_tree, cfg, state, cams, FOCAL, bytes_per_g=30.0, taus=taus)
     tight, loose = np.asarray(stats.cut_size)
     assert loose < tight, (tight, loose)
@@ -214,9 +214,9 @@ def test_foveated_tau_bitwise_vs_scalar_search(small_tree):
     s_vmap = svc.service_init(small_tree, cfg, b)
     walk = cams.copy()
     for _ in range(4):
-        s_pool, _st = svc.service_sync_pooled(
+        s_pool, _st, _d = svc.service_sync_pooled(
             small_tree, cfg, s_pool, walk, FOCAL, bytes_per_g=30.0, taus=taus)
-        s_vmap, _sv = svc.service_sync_vmapped(
+        s_vmap, _sv, _d2 = svc.service_sync_vmapped(
             small_tree, cfg, s_vmap, walk, FOCAL, bytes_per_g=30.0, taus=taus)
         assert (np.asarray(s_pool.cut_gids)
                 == np.asarray(s_vmap.cut_gids)).all()
@@ -288,3 +288,34 @@ def test_service_render_step_matches_direct_render(small_tree):
         np.testing.assert_array_equal(np.asarray(il[i]), np.asarray(ref_l))
         np.testing.assert_array_equal(np.asarray(ir[i]), np.asarray(ref_r))
     assert (np.asarray(stats.shared_preprocess) > 0).all()
+
+
+def test_render_fallback_caches_config_and_stack(small_tree):
+    """Repeated fleet renders must reuse the cached RenderConfig + stacked
+    rig pytree (no per-call for_fleet/stack_rigs rebuild) and still produce
+    identical frames; a new rig signature gets its own config."""
+    cfg = SessionConfig(tau=32.0, cut_budget=4096)
+    b = 2
+    cams = np.asarray([[30, 30, 2], [40, 32, 3]], np.float32)
+    service = svc.LodService(small_tree, cfg, b, focal=FOCAL, mode="pooled")
+    service.sync(cams)
+    rigs = [_rig_at(c, np.asarray(c) + [10, 10, -0.2], width=64, height=48)
+            for c in cams]
+    il0, ir0, _ = service.render_fallback(rigs, list_len=128,
+                                          max_pairs=1 << 15)
+    assert len(service._rcfg_cache) == 1 and len(service._stack_cache) == 1
+    (rcfg0,) = service._rcfg_cache.values()
+    (stack0,) = service._stack_cache.values()
+    il1, ir1, _ = service.render_fallback(rigs, list_len=128,
+                                          max_pairs=1 << 15)
+    # same signature: both caches hit (same objects, no growth)
+    assert len(service._rcfg_cache) == 1 and len(service._stack_cache) == 1
+    assert next(iter(service._rcfg_cache.values())) is rcfg0
+    assert next(iter(service._stack_cache.values())) is stack0
+    np.testing.assert_array_equal(np.asarray(il0), np.asarray(il1))
+    np.testing.assert_array_equal(np.asarray(ir0), np.asarray(ir1))
+    # a different static signature (resolution) adds a second entry
+    rigs2 = [_rig_at(c, np.asarray(c) + [10, 10, -0.2], width=32, height=32)
+             for c in cams]
+    service.render_fallback(rigs2, list_len=128, max_pairs=1 << 15)
+    assert len(service._rcfg_cache) == 2 and len(service._stack_cache) == 2
