@@ -307,7 +307,9 @@ def pow2_bucket(n: int, cap: int) -> int:
     The ONE bounded-recompilation bucket policy shared by every host-driven
     scheduler: the hybrid stale-slab sweep here, the service's pooled
     (client, slab) compaction and encode-once union width
-    (repro.serve), and the fleet occupied-tile pooling (repro.render)."""
+    (repro.serve), the fleet occupied-tile pooling (repro.render), and the
+    fleet capacity buckets of the lifecycle layer (repro.serve.fleet) —
+    regression-pinned by tests/test_lod_search.py."""
     b = 1 << int(np.ceil(np.log2(max(n, 1))))
     return max(1, min(b, cap))
 
@@ -332,19 +334,30 @@ def _top_and_staleness(tree: LodTree, state: TemporalState, cam_pos, focal, tau)
 
 @functools.partial(jax.jit, static_argnames=())
 def batched_top_and_staleness(tree: LodTree, states: TemporalState,
-                              cam_positions: jax.Array, focal, tau):
+                              cam_positions: jax.Array, focal, tau,
+                              active=None):
     """Per-client cheap phase of the hybrid search: exact top-tree sweep +
     per-subtree staleness predicate, vmapped over B clients. `tau` is a
     scalar or a (B,) per-client vector (foveated LoD).
 
     Returns (top_cut (B,T), rpe (B,Ns), stale (B,Ns)). The expensive phase —
     sweeping only the stale (client, slab) pairs — is host-scheduled across
-    clients by repro.serve.lod_service."""
+    clients by repro.serve.lod_service.
+
+    `active` is an optional (B,) bool slot mask (the ragged-fleet lifecycle
+    of repro.serve.fleet): inactive slots report ZERO staleness, so they add
+    no pairs to the pooled sweep bucket and no pressure to the pool-size
+    scalar the host awaits — sweep work tracks the fleet's *active*
+    staleness, not its slot capacity."""
     cam_positions = jnp.asarray(cam_positions, jnp.float32)
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32),
                             (cam_positions.shape[0],))
-    return jax.vmap(_top_and_staleness, in_axes=(None, 0, 0, None, 0))(
+    top_cut, rpe, stale = jax.vmap(
+        _top_and_staleness, in_axes=(None, 0, 0, None, 0))(
         tree, states, cam_positions, focal, taus)
+    if active is not None:
+        stale = stale & active[:, None]
+    return top_cut, rpe, stale
 
 
 @functools.partial(jax.jit, static_argnames=("max_depth",))

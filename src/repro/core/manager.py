@@ -155,7 +155,8 @@ def batched_cloud_sync(states: ManagerState, cut_masks: jax.Array,
 
 
 def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float, *,
-                       shared_payload: bool = False) -> jax.Array:
+                       shared_payload: bool = False,
+                       active=None) -> jax.Array:
     """(B,) per-client downlink bytes for a batched SyncPlan.
 
     (`SyncPlan.wire_bytes` reduces over every axis and is only correct for the
@@ -175,16 +176,28 @@ def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float, *,
     — downlink grows with *unique* Gaussians, not with B. Crossover: a row
     with a SINGLE requester costs ID_BYTES_DELTA more than on the unicast
     path (whose Δ ids are implicit), so a fully disjoint fleet pays a small
-    id overhead; sharing by ≥2 clients is always a win."""
+    id overhead; sharing by ≥2 clients is always a win.
+
+    `active` is an optional (B,) bool slot mask (ragged fleets,
+    repro.serve.fleet): an inactive slot receives NOTHING — not even the
+    sync header — so its row is exactly 0.0 bytes, and inactive slots are
+    excluded from the shared-row requester split."""
+    delta = plan.delta_data
+    if active is not None:
+        delta = delta & active[:, None]
     ids = (plan.cut_add.sum(axis=1) + plan.cut_remove.sum(axis=1)
            ).astype(jnp.float32)
     base = ids * ID_BYTES_DELTA + SYNC_HEADER_BYTES
     if not shared_payload:
-        return plan.n_delta.astype(jnp.float32) * bytes_per_gaussian + base
-    share = plan.delta_data.sum(axis=0)                      # (N,) requesters
-    frac = jnp.where(plan.delta_data,
-                     1.0 / jnp.maximum(share, 1)[None, :], 0.0).sum(axis=1)
-    return frac * (bytes_per_gaussian + ID_BYTES_DELTA) + base
+        out = plan.n_delta.astype(jnp.float32) * bytes_per_gaussian + base
+    else:
+        share = delta.sum(axis=0)                            # (N,) requesters
+        frac = jnp.where(delta,
+                         1.0 / jnp.maximum(share, 1)[None, :], 0.0).sum(axis=1)
+        out = frac * (bytes_per_gaussian + ID_BYTES_DELTA) + base
+    if active is not None:
+        out = jnp.where(active, out, 0.0)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -207,6 +207,48 @@ def session_step(tree: LodTree, codec: comp.Codec, cfg: SessionConfig,
     return idle_step(state)
 
 
+@jax.jit
+def _fresh_session_like(state: SessionState) -> SessionState:
+    """A freshly-initialized SessionState with `state`'s leaf shapes —
+    bitwise identical to `session_init` for the same tree/config, but
+    jittable (shapes come from the traced state, not host objects)."""
+    n = state.mgr_state.client_has.shape[0]
+    ns, s = state.temporal.slab_cut0.shape
+    store = state.client_store
+    return SessionState(
+        mgr_state=mgr.ManagerState.initial(n),
+        client=mgr.ClientState.initial(n),
+        temporal=ls.TemporalState.initial(ns, s),
+        client_store=Gaussians(
+            mu=jnp.zeros_like(store.mu),
+            log_scale=jnp.zeros_like(store.log_scale),
+            quat=jnp.zeros_like(store.quat).at[:, 0].set(1.0),
+            opacity=jnp.zeros_like(store.opacity),
+            sh=jnp.zeros_like(store.sh)),
+        cut_gids=jnp.full_like(state.cut_gids, -1),
+        sync_index=jnp.int32(0),
+        frame_index=jnp.int32(0),
+    )
+
+
+def admit_step(state: SessionState) -> SessionState:
+    """Functional client admission for the session core (the single-client
+    primitive behind the fleet lifecycle of repro.serve.fleet): returns the
+    freshly-admitted session occupying this state's slot. The temporal state
+    is fully unswept, so the admitted client's FIRST sync is a cold full
+    sweep and a cold Δcut — no special first-frame case anywhere."""
+    return _fresh_session_like(state)
+
+
+def evict_step(state: SessionState) -> SessionState:
+    """Functional client eviction: clear the session back to its fresh
+    value. Eviction and admission reset to the SAME state by construction —
+    `admit_step(evict_step(s)) == evict_step(s)` bitwise — which is the
+    contract that makes a recycled fleet slot indistinguishable from a
+    brand-new one (tests/test_fleet_churn.py)."""
+    return _fresh_session_like(state)
+
+
 def client_render_step(cfg: SessionConfig, state: SessionState,
                        rig: StereoRig):
     """Render the client's current queue from its *decoded* store (pure)."""

@@ -78,7 +78,8 @@ def _vmapped_frames_jit(queues, rigs, cfg):
 
 def batched_render_stereo(queues: Gaussians, rigs: StereoRig,
                           cfg: RenderConfig, *, path: str = "vmap",
-                          jit: bool = False, interpret: bool = True
+                          jit: bool = False, interpret: bool = True,
+                          active=None
                           ) -> Tuple[jax.Array, jax.Array, StereoFrameStats]:
     """Render B clients → (img_l (B,H,W,3), img_r (B,H,W,3), per-client
     StereoFrameStats). `queues`/`rigs` carry a leading client axis (see
@@ -87,13 +88,21 @@ def batched_render_stereo(queues: Gaussians, rigs: StereoRig,
     `jit=True` wraps the vmap path in one whole-fleet jit: measurably faster,
     but whole-program fusion reassociates FMAs, so results are allclose — not
     bitwise — vs the single-client path. Leave it off where the bit-accuracy
-    guarantee matters."""
+    guarantee matters.
+
+    `active` is an optional (B,) bool slot mask (ragged fleets,
+    repro.serve.fleet). On the pooled path an inactive slot's tiles NEVER
+    enter the occupied-tile bucket — fleet rasterization work tracks live
+    clients, not slot capacity — and its frames come back black. The fixed
+    -shape vmap path ignores the mask (an inactive slot's queue is empty, so
+    it renders black anyway at unavoidable vmap cost)."""
     if path == "vmap":
         if jit:
             return _vmapped_frames_jit(queues, rigs, cfg)
         return jax.vmap(lambda q, r: _single_frame(q, r, cfg))(queues, rigs)
     if path == "pooled":
-        return _pooled_render(queues, rigs, cfg, interpret=interpret)
+        return _pooled_render(queues, rigs, cfg, interpret=interpret,
+                              active=active)
     raise ValueError(f"unknown batched render path: {path!r}")
 
 
@@ -153,7 +162,8 @@ def _assemble(tiles_img, tiles_y, tiles_x, tile, height, width):
     return img[:, :height, :width]
 
 
-def _pooled_render(queues, rigs, cfg: RenderConfig, *, interpret: bool = True):
+def _pooled_render(queues, rigs, cfg: RenderConfig, *, interpret: bool = True,
+                   active=None):
     from repro.kernels.rasterize import rasterize_slabs_pallas
 
     plans = batched_build_plans(queues, rigs, cfg)
@@ -162,7 +172,14 @@ def _pooled_render(queues, rigs, cfg: RenderConfig, *, interpret: bool = True):
     n_l = b * cfg.tiles_x_wide * cfg.tiles_y      # left slabs, then right
     n_slabs = int(counts.shape[0])
 
-    occupied = np.nonzero(np.asarray(counts) > 0)[0]
+    occ_mask = np.asarray(counts) > 0
+    if active is not None:
+        # ragged fleet: an inactive slot's slabs never reach the kernel
+        act = np.asarray(active, bool)
+        occ_mask &= np.concatenate([
+            np.repeat(act, cfg.tiles_x_wide * cfg.tiles_y),
+            np.repeat(act, cfg.tiles_x * cfg.tiles_y)])
+    occupied = np.nonzero(occ_mask)[0]
     if occupied.size:
         bucket = ls.pow2_bucket(occupied.size, n_slabs)
         sel = jnp.asarray(np.resize(occupied, bucket))

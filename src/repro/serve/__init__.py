@@ -1,2 +1,4 @@
-"""Batched serving: the multi-client LoD cloud service (`lod_service`) and
-the LM prefill/decode engine (`engine`)."""
+"""Batched serving: the multi-client LoD cloud service (`lod_service`), the
+ragged-fleet lifecycle (`fleet`: runtime client admission/eviction on pow2
+capacity buckets), the encode-once Δcut dedup path (`delta_path`), and the
+LM prefill/decode engine (`engine`)."""

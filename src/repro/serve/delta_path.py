@@ -89,18 +89,25 @@ def _union_refs(delta_masks: jax.Array, union: jax.Array, width: int):
 
 
 def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
-                      delta_masks: jax.Array, budget: int) -> DeltaBatch:
+                      delta_masks: jax.Array, budget: int,
+                      active=None) -> DeltaBatch:
     """Encode one sync's fleet Δcut once.
 
     delta_masks: (B, N) bool — the batched `SyncPlan.delta_data`.
     budget: static cap on the encoded stream (rows). Correctness requires
     budget >= the true union size; `overflow` flags truncation.
+    active: optional (B,) bool slot mask (ragged fleets, repro.serve.fleet)
+    — an inactive slot contributes NO rows to the union (its `ref_mask` row
+    stays all-False and no Gaussian is encoded on its behalf), so the
+    encode-once stream and its pow2 width track the *active* fleet only.
 
     The encode width is pow2-bucketed on the ACTUAL union size (one scalar
     await — the same bounded-recompilation pattern as the pooled stale-slab
     scheduler), so codec quantize/pack FLOPs track the sync's unique
     Gaussians, not the static budget: a steady-state sync with a tiny union
     encodes a tiny bucket, never the whole budget."""
+    if active is not None:
+        delta_masks = delta_masks & active[:, None]
     union, n_union = _union_mask(delta_masks)
     n = int(jax.device_get(n_union))
     width = ls.pow2_bucket(n, budget)

@@ -1,0 +1,180 @@
+"""Fleet lifecycle: runtime client admission/eviction for the LoD service.
+
+The cloud fleet of `repro.serve.lod_service` is no longer fixed at
+construction: clients join, idle, and drop mid-session (the "ragged fleets"
+open item of the ROADMAP — the dynamic-viewer regime that serving-side
+delivery systems like L3GS and Voyager assume). The lifecycle layer keeps
+that churn **cheap and provable**:
+
+  * the fleet lives in a SLOT ARRAY of static capacity — every batched
+    service leaf keeps a leading (C, ...) axis and `FleetState` records
+    which slots are live (`active`), who occupies them (`client_ids`), and
+    how many times each slot has been recycled (`generation`);
+  * capacity follows the ONE shared bounded-recompilation policy
+    (`repro.core.lod_search.pow2_bucket`, the same bucketing used by the
+    stale-slab pool, the Δ-union encode width, and the pooled tile
+    rasterizer): admits and evicts *within* a capacity bucket are jitted
+    slot scatters with the slot index as a traced argument — ZERO
+    recompiles — and an admit that outgrows the bucket pads every leaf to
+    the next power of two, retracing each jitted path exactly once;
+  * an admitted slot starts from the fresh per-client state (`TemporalState`
+    fully unswept ⇒ its first sync is a cold full sweep / cold Δcut) and an
+    evicted slot is reset immediately, so a recycled slot is bit-for-bit
+    indistinguishable from a fresh one;
+  * inactive slots are FROZEN: the sync paths mask them out of the
+    staleness pool, the Δ-union encode, the wire accounting, and the pooled
+    tile rasterizer, and `freeze_inactive` keeps their per-slot state
+    bitwise at its reset value — so a surviving client's whole trajectory is
+    bitwise identical to a fixed-size service that only ever contained the
+    surviving clients (tests/test_fleet_churn.py).
+
+This module owns the generic machinery (the `FleetState` pytree + slot
+reset / pad / freeze helpers over batched pytrees); the service-specific
+state surgery lives in `repro.serve.lod_service` (`service_admit_slot`,
+`service_evict_slot`, `service_grow`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lod_search as ls
+
+# generous host-side cap for capacity growth — pow2_bucket clamps to it
+MAX_CAPACITY = 1 << 20
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FleetState:
+    """Slot-array bookkeeping for a capacity-C client fleet.
+
+    active:     (C,) bool — slot currently holds a live client
+    generation: (C,) int32 — admits into this slot so far (a recycled slot
+                bumps it, so (slot, generation) uniquely names a tenancy)
+    client_ids: (C,) int32 — the stable client id in each slot, -1 when free
+    next_id:    () int32 — next client id to hand out (monotone; ids are
+                never reused even when slots are)
+    """
+
+    active: jax.Array
+    generation: jax.Array
+    client_ids: jax.Array
+    next_id: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.active.shape[0]
+
+
+def fleet_init(capacity: int, n_active: int = 0) -> FleetState:
+    """A fleet of `capacity` slots with the first `n_active` occupied by
+    clients 0..n_active-1 (a fully-active fleet is exactly the legacy
+    fixed-size service)."""
+    if not 0 <= n_active <= capacity:
+        raise ValueError(f"n_active={n_active} outside [0, {capacity}]")
+    idx = jnp.arange(capacity, dtype=jnp.int32)
+    occupied = idx < n_active
+    return FleetState(
+        active=occupied,
+        generation=occupied.astype(jnp.int32),
+        client_ids=jnp.where(occupied, idx, -1),
+        next_id=jnp.int32(n_active),
+    )
+
+
+def fleet_capacity(n: int) -> int:
+    """The pow2 capacity bucket holding n clients — the shared
+    `lod_search.pow2_bucket` policy applied to fleet size."""
+    return ls.pow2_bucket(n, MAX_CAPACITY)
+
+
+def fleet_admit_slot(fleet: FleetState, slot, client_id) -> FleetState:
+    """Mark `slot` occupied by `client_id` (traced indices — pure, callable
+    inside jit; one trace per capacity, never per slot)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return FleetState(
+        active=fleet.active.at[slot].set(True),
+        generation=fleet.generation.at[slot].add(1),
+        client_ids=fleet.client_ids.at[slot].set(
+            jnp.asarray(client_id, jnp.int32)),
+        next_id=jnp.maximum(fleet.next_id,
+                            jnp.asarray(client_id, jnp.int32) + 1),
+    )
+
+
+def fleet_evict_slot(fleet: FleetState, slot) -> FleetState:
+    """Free `slot` (generation is kept — it counts admits, and marks the
+    tenancy that just ended as dead)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return FleetState(
+        active=fleet.active.at[slot].set(False),
+        generation=fleet.generation,
+        client_ids=fleet.client_ids.at[slot].set(-1),
+        next_id=fleet.next_id,
+    )
+
+
+def fleet_grow(fleet: FleetState, new_capacity: int) -> FleetState:
+    """Pad the slot array to `new_capacity` (new slots free). Host-side —
+    growth is the one lifecycle event allowed to change compiled shapes."""
+    c = fleet.capacity
+    if new_capacity < c:
+        raise ValueError(f"cannot shrink fleet {c} -> {new_capacity}")
+    pad = new_capacity - c
+    return FleetState(
+        active=jnp.concatenate([fleet.active,
+                                jnp.zeros((pad,), bool)]),
+        generation=jnp.concatenate([fleet.generation,
+                                    jnp.zeros((pad,), jnp.int32)]),
+        client_ids=jnp.concatenate([fleet.client_ids,
+                                    jnp.full((pad,), -1, jnp.int32)]),
+        next_id=fleet.next_id,
+    )
+
+
+# ---------------------------------------------------------------------------
+# generic slot surgery over batched pytrees (leaves lead with the slot axis)
+# ---------------------------------------------------------------------------
+
+
+def reset_slot(batched, fresh, slot):
+    """Write the unbatched `fresh` pytree into slot `slot` of `batched`
+    (leaves of `batched` are `fresh` leaves with a leading capacity axis).
+    Pure — compose inside a jitted admit/evict step so the slot index stays
+    traced and slot churn never retraces."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree_util.tree_map(lambda b, f: b.at[slot].set(f),
+                                  batched, fresh)
+
+
+def pad_slots(batched, fresh, new_capacity: int):
+    """Grow the leading capacity axis of `batched` to `new_capacity`,
+    filling the new slots with the unbatched `fresh` values (so a grown
+    slot is indistinguishable from a reset one)."""
+
+    def pad(b, f):
+        extra = new_capacity - b.shape[0]
+        if extra < 0:
+            raise ValueError(f"cannot shrink axis {b.shape[0]} -> "
+                             f"{new_capacity}")
+        fill = jnp.broadcast_to(f[None], (extra,) + f.shape)
+        return jnp.concatenate([b, fill], axis=0)
+
+    return jax.tree_util.tree_map(pad, batched, fresh)
+
+
+def freeze_inactive(new, old, active: jax.Array):
+    """Select `new` for active slots and `old` for inactive ones, leafwise
+    (active broadcasts over every trailing axis). This is what makes an
+    inactive slot PROVABLY free: its state stays bitwise at the reset value
+    no matter how many fleet syncs run past it."""
+
+    def sel(n, o):
+        a = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)

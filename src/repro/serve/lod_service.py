@@ -39,11 +39,24 @@ host schedules the pooled slab sweep of sync t the device is still executing
 the management-table update + encode of sync t−1 (see
 `service_sync_pooled`).
 
+The fleet is RAGGED at runtime (repro.serve.fleet): clients are admitted
+and evicted mid-session via `LodService.admit` / `LodService.evict`. State
+lives in a slot array whose capacity grows on the shared
+`lod_search.pow2_bucket` policy — admits/evicts *within* a capacity bucket
+are jitted slot scatters (zero recompiles; the slot index is a traced
+argument) and a bucket growth pads every leaf and retraces each jitted
+path exactly once. Inactive slots are provably free: they contribute no
+staleness to the pooled bucket, no rows to the Δ-union encode, no bytes to
+the wire accounting (not even a header), and no tiles to the pooled fleet
+rasterizer — and their per-slot state stays bitwise frozen at the reset
+value, so a surviving client's trajectory is bitwise identical to a
+fixed-size service of just the survivors (tests/test_fleet_churn.py).
+
 Per-sync, per-client byte and work accounting (`ServiceStats`, now including
-`unique_delta` / `dedup_bytes_saved`) feeds benchmarks/bench_multiclient.py
-and benchmarks/bench_fleet_sync.py (the multi-user analogs of the paper's
-bandwidth figures). Remaining follow-ons tracked in ROADMAP.md: sharding
-`ServiceState`/tree on the cloud mesh, runtime client admission/eviction.
+`unique_delta` / `dedup_bytes_saved`) feeds benchmarks/bench_multiclient.py,
+benchmarks/bench_fleet_sync.py and benchmarks/bench_fleet_churn.py (the
+multi-user analogs of the paper's bandwidth figures). Remaining follow-ons
+tracked in ROADMAP.md: sharding `ServiceState`/tree on the cloud mesh.
 """
 
 from __future__ import annotations
@@ -64,28 +77,42 @@ from repro.core.lod_tree import LodTree
 from repro.core.pipeline import SessionConfig, session_wire_format
 from repro.kernels import lod_cut as lc
 from repro.serve import delta_path as dp
+from repro.serve import fleet as flt
 from repro import render as rnd
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ServiceState:
-    """All per-client cloud state, batched on a leading (B, ...) axis."""
+    """All per-client cloud state, batched on a leading (C, ...) SLOT axis.
 
-    mgr: mgr.ManagerState       # leaves (B, N)
-    temporal: ls.TemporalState  # leaves (B, Ns, ...)
-    cut_gids: jax.Array         # (B, cut_budget) int32, -1 padded
-    sync_index: jax.Array       # (B,) int32
+    The leading axis is the fleet's slot CAPACITY, not its live client
+    count: `fleet` (repro.serve.fleet.FleetState) records which slots hold a
+    client. A fully-active fleet is exactly the legacy fixed-size service."""
+
+    mgr: mgr.ManagerState       # leaves (C, N)
+    temporal: ls.TemporalState  # leaves (C, Ns, ...)
+    cut_gids: jax.Array         # (C, cut_budget) int32, -1 padded
+    sync_index: jax.Array       # (C,) int32 — per-slot syncs WHILE ACTIVE
+    fleet: flt.FleetState       # slot occupancy / client ids / generations
+
+    @property
+    def capacity(self) -> int:
+        return self.sync_index.shape[0]
 
     @property
     def n_clients(self) -> int:
+        """Slot capacity (kept for API compatibility — the legacy fixed
+        service had n_clients == capacity; live count is `fleet.active`)."""
         return self.sync_index.shape[0]
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ServiceStats:
-    """Per-client accounting for one service sync (all leaves (B,))."""
+    """Per-client accounting for one service sync (all leaves (C,), the
+    slot capacity; inactive slots report all-zero rows — not even a sync
+    header is charged to an empty slot)."""
 
     cut_size: jax.Array        # int32 — render-queue size
     delta_size: jax.Array      # int32 — Δcut Gaussians shipped to the client
@@ -107,16 +134,86 @@ class ServiceStats:
     #                            with dedup off or the default budget)
 
 
-def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int
-                 ) -> ServiceState:
+def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int,
+                 capacity: Optional[int] = None) -> ServiceState:
+    """Service state for `n_clients` live clients in a `capacity`-slot
+    array (default: capacity == n_clients, the legacy fixed-size layout —
+    pre-provision a pow2 capacity to admit clients without an early
+    growth recompile)."""
     m = tree.meta
+    cap = max(n_clients, 1) if capacity is None else int(capacity)
+    if cap < max(n_clients, 1):
+        raise ValueError(f"capacity {cap} < n_clients {n_clients}")
     return ServiceState(
         mgr=jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a[None], (n_clients,) + a.shape),
+            lambda a: jnp.broadcast_to(a[None], (cap,) + a.shape),
             mgr.ManagerState.initial(tree.n_pad)),
-        temporal=ls.TemporalState.initial_batched(m.Ns, m.S, n_clients),
-        cut_gids=jnp.full((n_clients, cfg.cut_budget), -1, jnp.int32),
-        sync_index=jnp.zeros((n_clients,), jnp.int32),
+        temporal=ls.TemporalState.initial_batched(m.Ns, m.S, cap),
+        cut_gids=jnp.full((cap, cfg.cut_budget), -1, jnp.int32),
+        sync_index=jnp.zeros((cap,), jnp.int32),
+        fleet=flt.fleet_init(cap, n_clients),
+    )
+
+
+# ---------------------------------------------------------------------------
+# fleet lifecycle: slot admission / eviction / capacity growth
+# ---------------------------------------------------------------------------
+
+
+def _fresh_slot_leaves(state: ServiceState):
+    """(fresh ManagerState, fresh TemporalState, fresh cut row, fresh sync
+    counter) for one slot — shapes from the traced state, so usable in jit."""
+    n = state.mgr.client_has.shape[1]
+    ns, s = state.temporal.slab_cut0.shape[1:]
+    return (mgr.ManagerState.initial(n), ls.TemporalState.initial(ns, s),
+            jnp.full((state.cut_gids.shape[1],), -1, jnp.int32), jnp.int32(0))
+
+
+def _reset_slot(state: ServiceState, slot) -> ServiceState:
+    f_mgr, f_tmp, f_cut, f_idx = _fresh_slot_leaves(state)
+    return ServiceState(
+        mgr=flt.reset_slot(state.mgr, f_mgr, slot),
+        temporal=flt.reset_slot(state.temporal, f_tmp, slot),
+        cut_gids=state.cut_gids.at[jnp.asarray(slot, jnp.int32)].set(f_cut),
+        sync_index=state.sync_index.at[jnp.asarray(slot, jnp.int32)].set(f_idx),
+        fleet=state.fleet,
+    )
+
+
+@jax.jit
+def service_admit_slot(state: ServiceState, slot, client_id) -> ServiceState:
+    """Admit `client_id` into `slot`: reset every per-slot leaf to its fresh
+    value (temporal fully unswept ⇒ the first sync is a cold sweep + cold
+    Δcut) and mark the slot live. `slot`/`client_id` are TRACED — one trace
+    per capacity bucket, zero recompiles per admit."""
+    state = _reset_slot(state, slot)
+    return dataclasses.replace(
+        state, fleet=flt.fleet_admit_slot(state.fleet, slot, client_id))
+
+
+@jax.jit
+def service_evict_slot(state: ServiceState, slot) -> ServiceState:
+    """Evict the client in `slot`: free the slot AND reset its leaves
+    immediately, so a recycled slot is bit-for-bit indistinguishable from a
+    fresh one (and an inactive slot's state is exactly the fresh value —
+    the invariant tests/test_fleet_churn.py pins)."""
+    state = _reset_slot(state, slot)
+    return dataclasses.replace(
+        state, fleet=flt.fleet_evict_slot(state.fleet, slot))
+
+
+def service_grow(tree: LodTree, cfg: SessionConfig, state: ServiceState,
+                 new_capacity: int) -> ServiceState:
+    """Pad every slot-axis leaf to `new_capacity` (new slots free + fresh).
+    Host-side: growth is the ONE lifecycle event that changes compiled
+    shapes, so each jitted sync path retraces exactly once afterwards."""
+    f_mgr, f_tmp, f_cut, f_idx = _fresh_slot_leaves(state)
+    return ServiceState(
+        mgr=flt.pad_slots(state.mgr, f_mgr, new_capacity),
+        temporal=flt.pad_slots(state.temporal, f_tmp, new_capacity),
+        cut_gids=flt.pad_slots(state.cut_gids, f_cut, new_capacity),
+        sync_index=flt.pad_slots(state.sync_index, f_idx, new_capacity),
+        fleet=flt.fleet_grow(state.fleet, new_capacity),
     )
 
 
@@ -142,19 +239,30 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     repro.serve.delta_path (one codec call on the fleet union; `sync_bytes`
     uses the shared-payload split) and the built `DeltaBatch` is returned;
     otherwise the legacy per-client unicast accounting applies and the third
-    element is None."""
+    element is None.
+
+    Ragged fleets: inactive slots (per `state.fleet.active`) are masked out
+    of EVERYTHING here — cut masks (⇒ no Δ rows, no cut ids, fresh -1 cut
+    queues), the management-table update (their table stays bitwise frozen),
+    the wire accounting (0.0 bytes, header included), the Δ-union encode,
+    and the per-slot sync counter (it only ticks while active, so a slot's
+    counter always reads "syncs since this client was admitted")."""
+    active = state.fleet.active
+    masks = masks & active[:, None]
     new_mgr, plan = mgr.batched_cloud_sync(state.mgr, masks, state.sync_index,
                                            jnp.int32(cfg.w_star))
+    new_mgr = flt.freeze_inactive(new_mgr, state.mgr, active)
     gids, counts = _batched_cut_gids(masks, cfg.cut_budget)
-    unicast = mgr.batched_wire_bytes(plan, bytes_per_g)
+    unicast = mgr.batched_wire_bytes(plan, bytes_per_g, active=active)
     batch = None
     if dedup:
         if codec is None or delta_budget is None:
             raise ValueError("dedup sync needs a codec and a delta_budget")
         batch = dp.build_delta_batch(tree.gaussians, codec, plan.delta_data,
-                                     delta_budget)
+                                     delta_budget, active=active)
         sync_bytes = mgr.batched_wire_bytes(plan, bytes_per_g,
-                                            shared_payload=True)
+                                            shared_payload=True,
+                                            active=active)
         saved = unicast - sync_bytes
         delta_overflow = jnp.broadcast_to(batch.overflow, counts.shape)
     else:
@@ -163,18 +271,20 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
         delta_overflow = jnp.zeros(counts.shape, bool)
     new_state = ServiceState(
         mgr=new_mgr, temporal=temporal, cut_gids=gids,
-        sync_index=state.sync_index + 1)
+        sync_index=state.sync_index + active.astype(jnp.int32),
+        fleet=state.fleet)
+    zero = jnp.int32(0)
     stats = ServiceStats(
         cut_size=counts,
         delta_size=plan.n_delta,
         unique_delta=dp.first_owner_counts(plan.delta_data),
         sync_bytes=sync_bytes,
         dedup_bytes_saved=saved,
-        nodes_touched=nodes_touched.astype(jnp.int32),
-        resweeps=resweeps.astype(jnp.int32),
+        nodes_touched=jnp.where(active, nodes_touched.astype(jnp.int32), zero),
+        resweeps=jnp.where(active, resweeps.astype(jnp.int32), zero),
         client_resident=plan.n_resident,
         overflow=counts > cfg.cut_budget,
-        delta_overflow=delta_overflow)
+        delta_overflow=delta_overflow & active)
     return new_state, stats, batch
 
 
@@ -202,11 +312,19 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     Exactness reference for the pooled scheduler; also the right path when
     nearly everything is stale (e.g. the fleet's first frame). `taus` is an
     optional (B,) per-client foveated threshold vector; `dedup` switches the
-    sync tail to the encode-once fleet wire format (see `_finish_sync`)."""
+    sync tail to the encode-once fleet wire format (see `_finish_sync`).
+
+    Ragged fleets: the fixed-shape vmapped sweep runs over every SLOT (that
+    is the price of this path), but inactive slots' temporal state is
+    frozen back to its reset value afterwards, so the resulting state is
+    bitwise identical to the pooled scheduler's — which never touches them
+    at all."""
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     cut, temporal = ls.batched_temporal_search(
         tree, state.temporal, cams, jnp.float32(focal), tau_b)
+    temporal = flt.freeze_inactive(temporal, state.temporal,
+                                   state.fleet.active)
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks,
                         cut.nodes_touched, cut.resweep.sum(axis=1),
@@ -302,10 +420,13 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     m = tree.meta
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
+    active = state.fleet.active
     if tables is None:
         tables = ls.SlabTables.from_tree(tree)
+    # inactive slots report zero staleness, so they never enter the pool:
+    # sweep work (and the pool-size scalar below) tracks the ACTIVE fleet
     top_cut, rpe, stale = ls.batched_top_and_staleness(
-        tree, state.temporal, cams, jnp.float32(focal), tau_b)
+        tree, state.temporal, cams, jnp.float32(focal), tau_b, active)
     # the ONE host synchronization of the sync: the pool-size scalar
     n_stale = int(jax.device_get(stale.sum()))
     n_pairs = stale.shape[0] * stale.shape[1]
@@ -323,10 +444,14 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
             slab_cut, root_expand, rho, cam0, sel_b, sel_s,
             f_cut, f_rexp, f_rho, cams[sel_b])
 
+    # the active-masked scatter never touches an inactive slot's donated
+    # buffers; freeze the two non-donated leaves the same way so inactive
+    # slots stay bitwise at their reset value (swept=False ⇒ still cold)
     temporal = ls.TemporalState(
-        cam0=cam0, rho=rho, parent_expand0=rpe, slab_cut0=slab_cut,
-        root_expand0=root_expand,
-        swept=jnp.ones_like(stale))
+        cam0=cam0, rho=rho,
+        parent_expand0=jnp.where(active[:, None], rpe, tp.parent_expand0),
+        slab_cut0=slab_cut, root_expand0=root_expand,
+        swept=jnp.where(active[:, None], True, tp.swept))
     nodes_touched = m.T + stale.sum(axis=1).astype(jnp.int32) * m.S
     cut = ls.CutResult(top_cut=top_cut, slab_cut=slab_cut,
                        root_expand=root_expand, resweep=stale,
@@ -361,37 +486,55 @@ def service_render_step(tree: LodTree, state: ServiceState, rigs,
     `repro.render.stack_rigs`); `path` picks the vmapped XLA renderer or the
     fleet-pooled Pallas bucket path. Returns (img_l (B,H,W,3), img_r,
     per-client `repro.render.StereoFrameStats`) — the frame-side accounting
-    that sits alongside the sync-side `ServiceStats`."""
+    that sits alongside the sync-side `ServiceStats`.
+
+    Ragged fleets: inactive slots' queues are empty (-1 cut everywhere) and
+    their slots are masked out of the pooled occupied-tile bucket, so fleet
+    rasterization work tracks live clients — inactive slots just return
+    black frames."""
     queues = jax.vmap(lambda g: _masked_queue(tree.gaussians, g)
                       )(state.cut_gids)
     return rnd.batched_render_stereo(queues, rigs, rcfg, path=path,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     active=state.fleet.active)
 
 
 class LodService:
-    """Thin stateful wrapper: one shared tree/codec, B client sessions.
+    """Thin stateful wrapper: one shared tree/codec, a ragged client fleet.
 
-    `sync(cam_positions)` advances every client by one LoD sync and returns
-    per-client `ServiceStats`; the encode-once fleet payload of the latest
-    sync is kept on `last_delta` (`client_delta(i)` decodes one client's
-    slice). `mode` picks the scheduler: "pooled" (cross-client bucketed
-    hybrid, device-compacted — the production path) or "vmapped"
-    (always-sweep exactness reference). `sweep_impl` selects the pooled
-    bucket sweep: "xla" (vmapped) or "pallas"
-    (`repro.kernels.lod_cut.lod_pair_sweep_pallas`; `interpret=True` is the
-    CPU default — set False on real TPUs). `dedup` toggles the encode-once
-    wire format (on by default; `dedup=False` restores per-client unicast
-    accounting and skips the codec). `taus` optionally gives every client
-    its own foveated LoD threshold (B,). `render_fallback(rigs)` rasterizes
-    every client's current queue cloud-side in one batched dispatch, with
-    the static `RenderConfig` and stacked-rig pytree cached per rig
-    signature."""
+    `sync(cam_positions)` advances every live client by one LoD sync and
+    returns per-SLOT `ServiceStats` (inactive slot rows are all-zero); the
+    encode-once fleet payload of the latest sync is kept on `last_delta`
+    (`client_delta(cid)` decodes one client's slice). `mode` picks the
+    scheduler: "pooled" (cross-client bucketed hybrid, device-compacted —
+    the production path) or "vmapped" (always-sweep exactness reference).
+    `sweep_impl` selects the pooled bucket sweep: "xla" (vmapped) or
+    "pallas" (`repro.kernels.lod_cut.lod_pair_sweep_pallas`;
+    `interpret=True` is the CPU default — set False on real TPUs). `dedup`
+    toggles the encode-once wire format (on by default; `dedup=False`
+    restores per-client unicast accounting and skips the codec). `taus`
+    optionally gives every client its own foveated LoD threshold
+    (n_clients,). `render_fallback(rigs)` rasterizes every live client's
+    current queue cloud-side in one batched dispatch, with the static
+    `RenderConfig` and stacked-rig pytree cached per (rig, fleet) signature.
+
+    Fleet lifecycle: `admit(cam, tau)` returns a stable client id;
+    `evict(client_id)` frees the slot. Clients live in a `capacity`-slot
+    array (default: capacity == n_clients; pass `capacity=` to pre-provision
+    a pow2 bucket). Admits/evicts within the capacity bucket are jitted
+    slot scatters — zero recompiles; an admit that outgrows the bucket pads
+    to `lod_search.pow2_bucket(capacity + 1)` and retraces each jitted path
+    exactly once. Clients are addressed by their stable id everywhere
+    (`sync` dicts, `client_cut`, `client_delta`, `client_tau`); for a
+    never-churned service ids coincide with 0..B-1, so the legacy positional
+    API keeps working unchanged."""
 
     def __init__(self, tree: LodTree, cfg: SessionConfig, n_clients: int,
                  focal: float, mode: str = "pooled", taus=None,
                  dedup: bool = True, sweep_impl: str = "xla",
                  interpret: bool = True,
-                 delta_budget: Optional[int] = None):
+                 delta_budget: Optional[int] = None,
+                 capacity: Optional[int] = None):
         if mode not in ("pooled", "vmapped"):
             raise ValueError(f"unknown scheduler mode: {mode!r}")
         if sweep_impl not in ("xla", "pallas"):
@@ -401,71 +544,239 @@ class LodService:
                              "sweep; use mode='pooled'")
         self.tree = tree
         self.cfg = cfg
-        self.n_clients = n_clients
+        self.capacity = (max(int(n_clients), 1) if capacity is None
+                         else int(capacity))
+        if self.capacity < max(n_clients, 1):
+            raise ValueError(f"capacity {self.capacity} < n_clients "
+                             f"{n_clients}")
         self.focal = float(focal)
         self.mode = mode
         self.sweep_impl = sweep_impl
         self.interpret = bool(interpret)
         self.dedup = bool(dedup)
-        # validate eagerly (shared with the sync-time path)
-        self.taus = (None if taus is None
-                     else np.asarray(_fleet_taus(cfg, n_clients, taus)))
+        # host-side control-plane mirror of state.fleet (slot lookup and
+        # validation without device round-trips; the device FleetState is
+        # kept consistent by the jitted admit/evict steps)
+        self._active = np.zeros(self.capacity, bool)
+        self._active[:n_clients] = True
+        self._client_ids = np.full(self.capacity, -1, np.int64)
+        self._client_ids[:n_clients] = np.arange(n_clients)
+        self._next_id = int(n_clients)
+        self._slot_cams = np.zeros((self.capacity, 3), np.float32)
+        # per-SLOT foveated thresholds; constructor taus address the initial
+        # clients, admitted clients get theirs via admit(tau=...)
+        if taus is None:
+            self.taus = None
+        else:
+            per_client = np.asarray(_fleet_taus(cfg, n_clients, taus),
+                                    np.float32)
+            self.taus = np.full(self.capacity, cfg.tau, np.float32)
+            self.taus[:n_clients] = per_client
         self.codec, self.bytes_per_g = session_wire_format(tree, cfg)
         # static union capacity of the encode-once stream: every client's
-        # Δcut is bounded by its cut budget, so the fleet union is bounded by
-        # min(B * cut_budget, N)
+        # Δcut is bounded by its cut budget, so the fleet union is bounded
+        # by min(capacity * cut_budget, N); recomputed on capacity growth
+        # unless pinned by the caller
+        self._delta_budget_arg = delta_budget
         self.delta_budget = (int(delta_budget) if delta_budget is not None
-                             else min(tree.n_pad, cfg.cut_budget * n_clients))
+                             else min(tree.n_pad,
+                                      cfg.cut_budget * self.capacity))
         # device-resident slab tables: gathered once, reused by every pooled
         # sweep (the per-sync program starts at the pair gather); the
         # vmapped reference path never reads them, so don't hold the copy
         self.tables = (ls.SlabTables.from_tree(tree) if mode == "pooled"
                        else None)
-        self.state = service_init(tree, cfg, n_clients)
+        self.state = service_init(tree, cfg, n_clients,
+                                  capacity=self.capacity)
         self.last_delta: Optional[dp.DeltaBatch] = None
+        self._delta_ids = np.full(self.capacity, -1, np.int64)
         self._rcfg_cache = {}
         self._stack_cache = {}
 
-    def sync(self, cam_positions) -> ServiceStats:
-        """One fleet sync. Returns device-resident per-client stats — they
+    # -- fleet lifecycle ------------------------------------------------------
+
+    @property
+    def n_clients(self) -> int:
+        """Number of LIVE clients (== capacity for a never-churned fleet)."""
+        return int(self._active.sum())
+
+    @property
+    def active_ids(self):
+        """Stable client ids of the live fleet, in slot order (the order
+        `sync` expects array-form camera positions in)."""
+        return [int(c) for c in self._client_ids[self._active]]
+
+    def _slot_of(self, client_id: int) -> int:
+        slots = np.flatnonzero(self._active
+                               & (self._client_ids == int(client_id)))
+        if slots.size == 0:
+            raise KeyError(f"no live client with id {client_id}")
+        return int(slots[0])
+
+    def client_tau(self, client_id: int) -> float:
+        """One live client's foveated LoD threshold (cfg.tau unless set at
+        construction or admission)."""
+        slot = self._slot_of(client_id)
+        return float(self.cfg.tau if self.taus is None else self.taus[slot])
+
+    def admit(self, cam=None, tau: Optional[float] = None) -> int:
+        """Admit one client; returns its stable id. The new slot starts
+        fully stale, so the client's first sync is a cold full sweep and a
+        cold Δcut. Within the current capacity bucket this is a jitted slot
+        scatter (zero recompiles); on a full fleet the capacity grows to the
+        next pow2 bucket first (one retrace of each jitted path). `cam`
+        seeds the slot's camera (used until the next `sync` provides one);
+        `tau` its foveated threshold (default cfg.tau)."""
+        free = np.flatnonzero(~self._active)
+        if free.size == 0:
+            if self.capacity >= flt.MAX_CAPACITY:
+                raise ValueError(f"fleet at MAX_CAPACITY ({flt.MAX_CAPACITY})")
+            self._grow(flt.fleet_capacity(self.capacity + 1))
+            free = np.flatnonzero(~self._active)
+        slot = int(free[0])
+        client_id = self._next_id
+        self._next_id += 1
+        self.state = service_admit_slot(self.state, slot, client_id)
+        self._active[slot] = True
+        self._client_ids[slot] = client_id
+        self._slot_cams[slot] = (np.zeros(3, np.float32) if cam is None
+                                 else np.asarray(cam, np.float32))
+        if tau is not None and self.taus is None:
+            self.taus = np.full(self.capacity, self.cfg.tau, np.float32)
+        if self.taus is not None:
+            self.taus[slot] = float(self.cfg.tau if tau is None else tau)
+        return client_id
+
+    def evict(self, client_id: int) -> None:
+        """Evict a live client. Its slot is freed AND reset in the same
+        jitted step, so the next tenant of the slot is bit-for-bit
+        indistinguishable from one landing on a never-used slot. No wire
+        traffic results: both sides run the shared reuse rule, and the
+        vacated slot contributes nothing to any later sync."""
+        slot = self._slot_of(client_id)
+        self.state = service_evict_slot(self.state, slot)
+        self._active[slot] = False
+        self._client_ids[slot] = -1
+        self._slot_cams[slot] = 0.0
+        if self.taus is not None:
+            self.taus[slot] = self.cfg.tau
+
+    def _grow(self, new_capacity: int) -> None:
+        """Pad every slot-axis array to `new_capacity` (host mirrors
+        included). The stacked-rig / RenderConfig caches are dropped: their
+        signatures include the capacity bucket, and the pinned pytrees have
+        the old leading axis."""
+        self.state = service_grow(self.tree, self.cfg, self.state,
+                                  new_capacity)
+        pad = new_capacity - self.capacity
+        self._active = np.concatenate([self._active, np.zeros(pad, bool)])
+        self._client_ids = np.concatenate(
+            [self._client_ids, np.full(pad, -1, np.int64)])
+        self._slot_cams = np.concatenate(
+            [self._slot_cams, np.zeros((pad, 3), np.float32)])
+        if self.taus is not None:
+            self.taus = np.concatenate(
+                [self.taus, np.full(pad, self.cfg.tau, np.float32)])
+        self.capacity = new_capacity
+        if self._delta_budget_arg is None:
+            self.delta_budget = min(self.tree.n_pad,
+                                    self.cfg.cut_budget * self.capacity)
+        self._rcfg_cache.clear()
+        self._stack_cache.clear()
+
+    # -- sync -----------------------------------------------------------------
+
+    def sync(self, cam_positions=None) -> ServiceStats:
+        """One fleet sync. Returns device-resident per-SLOT stats — they
         are NOT forced here, so back-to-back `sync` calls pipeline: the host
         dispatches sync t while the device finishes the table update and
         encode tail of sync t−1 (the only awaits per sync are the pooled
-        scheduler's and the encoder's bucket-size scalars)."""
-        cams = np.asarray(cam_positions, np.float32)
-        if cams.shape != (self.n_clients, 3):
-            raise ValueError(f"expected ({self.n_clients}, 3) camera "
-                             f"positions, got {cams.shape}")
+        scheduler's and the encoder's bucket-size scalars).
+
+        `cam_positions` is either an (n_clients, 3) array addressing the
+        live clients in slot order (`active_ids` order — the legacy form), a
+        {client_id: position} dict updating a subset (others keep their last
+        known position), or None (everyone keeps their last position)."""
+        if isinstance(cam_positions, dict):
+            for cid, pos in cam_positions.items():
+                self._slot_cams[self._slot_of(cid)] = np.asarray(
+                    pos, np.float32)
+        elif cam_positions is not None:
+            cams = np.asarray(cam_positions, np.float32)
+            if cams.shape != (self.n_clients, 3):
+                raise ValueError(f"expected ({self.n_clients}, 3) camera "
+                                 f"positions, got {cams.shape}")
+            self._slot_cams[self._active] = cams
         kw = dict(taus=self.taus, codec=self.codec, dedup=self.dedup,
                   delta_budget=self.delta_budget)
         if self.mode == "pooled":
             self.state, stats, batch = service_sync_pooled(
-                self.tree, self.cfg, self.state, cams, self.focal,
+                self.tree, self.cfg, self.state, self._slot_cams, self.focal,
                 self.bytes_per_g, tables=self.tables,
                 sweep_impl=self.sweep_impl, interpret=self.interpret, **kw)
         else:
             self.state, stats, batch = service_sync_vmapped(
-                self.tree, self.cfg, self.state, cams, self.focal,
+                self.tree, self.cfg, self.state, self._slot_cams, self.focal,
                 self.bytes_per_g, **kw)
         if batch is not None:
             self.last_delta = batch
+            # tenancy snapshot: which client each slot's ref_mask row is FOR
+            # (guards client_delta against churn between sync and decode)
+            self._delta_ids = self._client_ids.copy()
         return stats
 
-    def client_cut(self, client: int) -> jax.Array:
-        """(cut_budget,) int32 render-queue ids of one client (-1 padded)."""
-        return self.state.cut_gids[client]
+    def client_cut(self, client_id: int) -> jax.Array:
+        """(cut_budget,) int32 render-queue ids of one live client (-1
+        padded). Addressed by stable client id (== slot index for a
+        never-churned fleet)."""
+        return self.state.cut_gids[self._slot_of(client_id)]
 
-    def client_delta(self, client: int):
+    def client_delta(self, client_id: int):
         """Decode one client's Δcut slice of the latest encode-once payload:
         (ids (U,) int32 — -1 where the union row is not this client's — and
         the decoded union rows). Bitwise what the encode-per-client path
-        would have delivered (tests/test_delta_path.py)."""
+        would have delivered (tests/test_delta_path.py).
+
+        The payload is a per-sync artifact: a client admitted (or a slot
+        recycled) after the latest sync has no slice in it — that is an
+        error, never a silent read of the previous tenant's row."""
         if self.last_delta is None:
             raise ValueError("no sync performed yet (or dedup=False)")
+        slot = self._slot_of(client_id)
+        if (slot >= len(self._delta_ids)
+                or self._delta_ids[slot] != client_id):
+            raise ValueError(f"latest payload predates client {client_id}'s "
+                             f"admission — sync first")
         return dp.decode_client(self.codec, self.last_delta,
-                                self.tree.gaussians.sh.shape[1], client)
+                                self.tree.gaussians.sh.shape[1], slot)
 
     # -- fallback rendering ---------------------------------------------------
+
+    def _fleet_key(self):
+        """The fleet signature every render cache key must carry: the
+        capacity bucket AND the live slot layout. Without it an evict (or a
+        slot recycle) would serve a stacked-rig pytree whose slot alignment
+        belongs to the previous fleet."""
+        return (self.capacity, tuple(np.flatnonzero(self._active)))
+
+    def _slot_aligned_rigs(self, rigs):
+        """Expand an n_clients rig list (slot order) to a capacity-length
+        slot list; free slots borrow the first rig purely as a shape/static
+        placeholder — their queues are empty and the pooled path masks their
+        tiles out entirely."""
+        rigs = list(rigs)
+        if self.n_clients == 0:
+            raise ValueError("no live clients to render (fleet is empty)")
+        if len(rigs) == self.capacity and self.n_clients == self.capacity:
+            return rigs
+        if len(rigs) != self.n_clients:
+            raise ValueError(f"expected {self.n_clients} rigs (one per live "
+                             f"client, slot order) or a slot-aligned stacked "
+                             f"pytree, got {len(rigs)}")
+        slot_rigs = [rigs[0]] * self.capacity
+        for slot, rig in zip(np.flatnonzero(self._active), rigs):
+            slot_rigs[int(slot)] = rig
+        return slot_rigs
 
     def _fleet_render_config(self, rigs, tile, list_len, max_pairs):
         """Per-signature cache of the static RenderConfig + stacked rigs.
@@ -473,19 +784,23 @@ class LodService:
         Rebuilding the (frozen, hashable) RenderConfig each call re-traces
         nothing by itself, but `for_fleet` + `stack_rigs` walk every rig on
         the host per frame; repeated fleet renders (the steady state of the
-        fallback tier) hit the caches instead. The stack cache keys on rig
+        fallback tier) hit the caches instead. Both keys include the fleet
+        signature (capacity bucket + live slots), so churn invalidates
+        exactly the stale entries; the stack cache additionally keys on rig
         identity and pins the rig objects, so a hit can only mean the exact
-        same rig pytrees."""
+        same rig pytrees in the exact same fleet."""
+        fleet_key = self._fleet_key()
         static_sig = (tuple((r.left.width, r.left.height, float(r.left.focal),
                              r.left.near, r.left.far, r.baseline)
-                            for r in rigs), tile, list_len, max_pairs)
+                            for r in rigs), tile, list_len, max_pairs,
+                      fleet_key)
         rcfg = self._rcfg_cache.get(static_sig)
         if rcfg is None:
             rcfg = rnd.RenderConfig.for_fleet(rigs, tile=tile,
                                               list_len=list_len,
                                               max_pairs=max_pairs)
             self._rcfg_cache[static_sig] = rcfg
-        stack_key = tuple(id(r) for r in rigs)
+        stack_key = (tuple(id(r) for r in rigs), fleet_key)
         hit = self._stack_cache.get(stack_key)
         if hit is None:
             if len(self._stack_cache) >= 8:   # bound the pinned rigs
@@ -497,21 +812,24 @@ class LodService:
     def render_fallback(self, rigs, *, tile: int = 16, list_len: int = 256,
                         max_pairs: int = 1 << 16, path: str = "vmap",
                         interpret: bool = True):
-        """Fleet render of all B clients' queues → (img_l, img_r, stats).
+        """Fleet render of every live client's queue → (img_l, img_r, stats)
+        with a leading SLOT axis (inactive slots render black).
 
-        `rigs` is a list of B StereoRigs (shared resolution/baseline) or an
-        already-stacked rig pytree. The derived static `RenderConfig` (and,
-        for rig lists, the stacked pytree) is cached per rig signature so
-        repeated fleet renders skip the per-call host rebuild."""
+        `rigs` is a list of n_clients StereoRigs (shared resolution/
+        baseline; slot order, like `sync`) or an already slot-aligned
+        stacked rig pytree. The derived static `RenderConfig` (and, for rig
+        lists, the stacked pytree) is cached per (rig, fleet) signature so
+        repeated fleet renders skip the per-call host rebuild — and churn
+        can never serve a stale stacked-rig pytree."""
         if isinstance(rigs, (list, tuple)):
-            rcfg, rigs = self._fleet_render_config(list(rigs), tile,
-                                                  list_len, max_pairs)
+            rcfg, rigs = self._fleet_render_config(
+                self._slot_aligned_rigs(rigs), tile, list_len, max_pairs)
         else:
             from repro.core.stereo import n_categories
             focal = float(np.max(np.asarray(rigs.left.focal)))
             static_sig = (rigs.left.width, rigs.left.height, focal,
                           rigs.left.near, rigs.baseline, tile, list_len,
-                          max_pairs)
+                          max_pairs, self._fleet_key())
             rcfg = self._rcfg_cache.get(static_sig)
             if rcfg is None:
                 max_disp = focal * rigs.baseline / rigs.left.near

@@ -129,3 +129,108 @@ def test_property_full_search_matches_oracle(tiny_tree, tau, x, y, z):
     cut, _ = ls.full_search(tiny_tree, cam, jnp.float32(FOCAL), jnp.float32(tau))
     ref = ls.reference_search_np(tiny_tree, cam, FOCAL, tau)
     assert (np.asarray(cut.mask(tiny_tree)) == ref).all()
+
+
+# -- the shared bounded-recompilation bucket policy ---------------------------
+
+
+def _pow2_ceil(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(0, 1 << 20), cap=st.integers(1, 1 << 20))
+def test_property_pow2_bucket(n, cap):
+    """pow2_bucket is the ONE bucket policy every host-driven scheduler
+    shares; pin its algebra: the result is the next power of two (clamped to
+    the cap), covers n whenever the cap allows, is monotone in n, and is a
+    fixed point of itself (re-bucketing a bucket never grows it)."""
+    b = ls.pow2_bucket(n, cap)
+    want = min(_pow2_ceil(max(n, 1)), cap)
+    assert b == max(1, want)
+    # power of two unless the (possibly non-pow2) cap clamped it
+    assert (b & (b - 1)) == 0 or b == cap
+    assert 1 <= b <= max(cap, 1)
+    if _pow2_ceil(max(n, 1)) <= cap:
+        assert b >= n  # the bucket really holds n items
+    # monotone in n
+    assert ls.pow2_bucket(max(n - 1, 0), cap) <= b
+    assert b <= ls.pow2_bucket(n + 1, cap)
+    # idempotent
+    assert ls.pow2_bucket(b, cap) == b
+
+
+def test_pow2_bucket_is_the_policy_of_all_host_schedulers(
+        small_tree, monkeypatch):
+    """Regression-pin the SHARED policy: the four host-driven schedulers —
+    the hybrid stale-slab sweep, the service's pooled (client, slab)
+    compaction, the Δ-union encode width, and the fleet occupied-tile
+    render pooling — must all route their bucket choice through
+    ls.pow2_bucket (and dispatch exactly the bucket it returns)."""
+    import jax
+
+    from repro.core.pipeline import SessionConfig
+    from repro.serve import delta_path as dp
+    from repro.serve import lod_service as svc
+    from repro import render as rnd
+    from repro.render import batched as rb
+
+    calls = []
+    real = ls.pow2_bucket
+
+    def recording(n, cap):
+        b = real(n, cap)
+        calls.append((int(n), int(cap), int(b)))
+        return b
+
+    monkeypatch.setattr(ls, "pow2_bucket", recording)
+    cam = np.array([30.0, 30.0, 2.0], np.float32)
+
+    # (1) host-driven hybrid search (lod_search module-global lookup)
+    _, state = ls.full_search(small_tree, cam, jnp.float32(FOCAL),
+                              jnp.float32(48.0))
+    calls.clear()
+    cut, _ = ls.temporal_search_hybrid(small_tree, state, cam + 50.0,
+                                       FOCAL, 48.0)
+    n_stale = int(np.asarray(cut.resweep).sum())
+    assert n_stale > 0 and calls == [(n_stale, small_tree.meta.Ns,
+                                      real(n_stale, small_tree.meta.Ns))]
+
+    # (2) pooled (client, slab) compaction + (3) Δ-union encode width
+    cfg = SessionConfig(tau=32.0, cut_budget=4096)
+    codec, bpg = svc.session_wire_format(small_tree, cfg)
+    st = svc.service_init(small_tree, cfg, 2)
+    calls.clear()
+    st, stats, batch = svc.service_sync_pooled(
+        small_tree, cfg, st, np.stack([cam, cam + 3.0]), FOCAL,
+        bytes_per_g=bpg, codec=codec, dedup=True,
+        delta_budget=small_tree.n_pad)
+    pool_n = int(np.asarray(stats.resweeps).sum())
+    union_n = int(batch.n_union)
+    assert (pool_n, 2 * small_tree.meta.Ns,
+            real(pool_n, 2 * small_tree.meta.Ns)) in calls
+    assert (union_n, small_tree.n_pad,
+            real(union_n, small_tree.n_pad)) in calls
+    assert len(calls) == 2
+
+    # (4) fleet occupied-tile pooling on the pooled render path
+    from repro.core.camera import StereoRig, make_camera
+    from repro.core.gaussians import random_gaussians
+    rig = StereoRig(left=make_camera([0, -16, 2], [0, 0, 0], focal_px=200.0,
+                                     width=48, height=32, near=0.25),
+                    baseline=0.06)
+    queues = jax.tree_util.tree_map(
+        lambda a: jnp.stack([a, a]),
+        random_gaussians(np.random.default_rng(0), 64, sh_degree=1,
+                         extent=10.0))
+    rigs = rnd.stack_rigs([rig, rig])
+    rcfg = rnd.RenderConfig.for_rig(rig, tile=16, list_len=64,
+                                    max_pairs=1 << 12)
+    calls.clear()
+    rb.batched_render_stereo(queues, rigs, rcfg, path="pooled")
+    assert len(calls) == 1
+    occ, cap, got = calls[0]
+    assert occ > 0 and got == real(occ, cap)
