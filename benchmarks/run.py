@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.bench_multiclient",  # multi-user cloud serving (ROADMAP)
     "benchmarks.bench_fleet_sync",   # encode-once fleet sync (dedup × B)
     "benchmarks.bench_fleet_churn",  # ragged fleet lifecycle (admit/evict)
+    "benchmarks.bench_fleet_shard",  # mesh-sharded fleet (clients × slabs)
     "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24
     "benchmarks.bench_stereo",       # Figs. 8/21
     "benchmarks.bench_stereo_batched",  # fleet-batched client rendering

@@ -120,11 +120,19 @@ class SlabTables:
     valid: jax.Array     # (Ns, S) bool
 
     @staticmethod
-    def from_tree(tree: LodTree) -> "SlabTables":
-        return SlabTables(
+    def from_tree(tree: LodTree, mesh=None) -> "SlabTables":
+        """`mesh` (a fleet mesh, repro.sharding.fleet) shards every table on
+        its leading Ns axis over the `slabs` mesh axis — the city's attribute
+        tables stop being bounded by one accelerator's HBM. Indivisible Ns
+        (or no mesh) replicates: bitwise the single-device tables."""
+        tables = SlabTables(
             mu=tree.slab_mu(), size=tree.slab_size(),
             parent=tree.slab_parent, level=tree.slab_level,
             is_leaf=tree.slab_is_leaf, valid=tree.slab_valid)
+        if mesh is not None:
+            from repro.sharding.fleet import shard_slab_tables
+            tables = shard_slab_tables(mesh, tables)
+        return tables
 
 
 # ---------------------------------------------------------------------------
@@ -332,10 +340,10 @@ def _top_and_staleness(tree: LodTree, state: TemporalState, cam_pos, focal, tau)
     return top_cut, rpe, stale
 
 
-@functools.partial(jax.jit, static_argnames=())
+@functools.partial(jax.jit, static_argnames=("mesh",))
 def batched_top_and_staleness(tree: LodTree, states: TemporalState,
                               cam_positions: jax.Array, focal, tau,
-                              active=None):
+                              active=None, *, mesh=None):
     """Per-client cheap phase of the hybrid search: exact top-tree sweep +
     per-subtree staleness predicate, vmapped over B clients. `tau` is a
     scalar or a (B,) per-client vector (foveated LoD).
@@ -348,7 +356,12 @@ def batched_top_and_staleness(tree: LodTree, states: TemporalState,
     of repro.serve.fleet): inactive slots report ZERO staleness, so they add
     no pairs to the pooled sweep bucket and no pressure to the pool-size
     scalar the host awaits — sweep work tracks the fleet's *active*
-    staleness, not its slot capacity."""
+    staleness, not its slot capacity.
+
+    `mesh` (STATIC; a fleet mesh, repro.sharding.fleet) constrains the
+    per-client outputs on the `clients` axis, so each client shard computes
+    its own staleness rows — the cross-host staleness pool's cheap phase
+    never gathers the fleet."""
     cam_positions = jnp.asarray(cam_positions, jnp.float32)
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32),
                             (cam_positions.shape[0],))
@@ -357,6 +370,11 @@ def batched_top_and_staleness(tree: LodTree, states: TemporalState,
         tree, states, cam_positions, focal, taus)
     if active is not None:
         stale = stale & active[:, None]
+    if mesh is not None:
+        from repro.sharding.fleet import constrain_fleet
+        top_cut = constrain_fleet(top_cut, ("clients", None), mesh)
+        rpe = constrain_fleet(rpe, ("clients", None), mesh)
+        stale = constrain_fleet(stale, ("clients", None), mesh)
     return top_cut, rpe, stale
 
 

@@ -39,3 +39,14 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_mesh(shape, axes) -> jax.sharding.Mesh:
     """Arbitrary mesh (tests use small fake-device meshes)."""
     return _make_mesh(shape, axes)
+
+
+def make_fleet_mesh(clients: int = 1, slabs: int = 1) -> jax.sharding.Mesh:
+    """The cloud-serving mesh (repro.sharding.fleet). Axis semantics:
+      clients — shards per-client service state on its leading slot axis
+                (ServiceState / FleetState / stats / fallback frames)
+      slabs   — shards the shared tree's slab attribute tables and the
+                encode-once union codec rows
+    clients*slabs must equal the available device count (multi-host CPU
+    tests force it with --xla_force_host_platform_device_count)."""
+    return _make_mesh((clients, slabs), ("clients", "slabs"))

@@ -79,7 +79,7 @@ def _vmapped_frames_jit(queues, rigs, cfg):
 def batched_render_stereo(queues: Gaussians, rigs: StereoRig,
                           cfg: RenderConfig, *, path: str = "vmap",
                           jit: bool = False, interpret: bool = True,
-                          active=None
+                          active=None, mesh=None
                           ) -> Tuple[jax.Array, jax.Array, StereoFrameStats]:
     """Render B clients → (img_l (B,H,W,3), img_r (B,H,W,3), per-client
     StereoFrameStats). `queues`/`rigs` carry a leading client axis (see
@@ -95,15 +95,33 @@ def batched_render_stereo(queues: Gaussians, rigs: StereoRig,
     enter the occupied-tile bucket — fleet rasterization work tracks live
     clients, not slot capacity — and its frames come back black. The fixed
     -shape vmap path ignores the mask (an inactive slot's queue is empty, so
-    it renders black anyway at unavoidable vmap cost)."""
+    it renders black anyway at unavoidable vmap cost).
+
+    `mesh` (a fleet mesh, repro.sharding.fleet) shards the returned frames
+    and per-client stats on the `clients` axis — on both paths each client
+    shard's fallback pixels live with its slots (plan building and the XLA
+    rasterization are slot-parallel; the pooled path's single Pallas bucket
+    dispatch itself stays replicated — its tile pooling is still global)."""
     if path == "vmap":
         if jit:
-            return _vmapped_frames_jit(queues, rigs, cfg)
-        return jax.vmap(lambda q, r: _single_frame(q, r, cfg))(queues, rigs)
+            out = _vmapped_frames_jit(queues, rigs, cfg)
+        else:
+            out = jax.vmap(lambda q, r: _single_frame(q, r, cfg))(queues,
+                                                                  rigs)
+        return _constrain_frames(out, mesh)
     if path == "pooled":
-        return _pooled_render(queues, rigs, cfg, interpret=interpret,
-                              active=active)
+        return _constrain_frames(
+            _pooled_render(queues, rigs, cfg, interpret=interpret,
+                           active=active, mesh=mesh), mesh)
     raise ValueError(f"unknown batched render path: {path!r}")
+
+
+def _constrain_frames(out, mesh):
+    """Pin (img_l, img_r, stats) on the `clients` axis (no-op meshless)."""
+    if mesh is None:
+        return out
+    from repro.sharding.fleet import shard_service_state
+    return shard_service_state(mesh, out)
 
 
 # ---------------------------------------------------------------------------
@@ -163,10 +181,20 @@ def _assemble(tiles_img, tiles_y, tiles_x, tile, height, width):
 
 
 def _pooled_render(queues, rigs, cfg: RenderConfig, *, interpret: bool = True,
-                   active=None):
+                   active=None, mesh=None):
     from repro.kernels.rasterize import rasterize_slabs_pallas
 
     plans = batched_build_plans(queues, rigs, cfg)
+    if mesh is not None:
+        # the pooling tail (slab gather → ONE Pallas bucket dispatch →
+        # scatter/assemble) is cross-client by design and its kernel is
+        # opaque to the SPMD partitioner — running it on client-sharded
+        # plans computes shard-local garbage. Replicate the built plans
+        # (one all-gather; plan BUILDING above stays sharded over clients)
+        # so the tail is exactly the single-device program, then
+        # `_constrain_frames` re-shards the assembled frames over clients.
+        from repro.sharding.fleet import replicate_fleet
+        plans = replicate_fleet(mesh, plans)
     entries, counts, origins = _gather_fleet_slabs(plans, cfg)
     b = plans.ranks.shape[0]
     n_l = b * cfg.tiles_x_wide * cfg.tiles_y      # left slabs, then right

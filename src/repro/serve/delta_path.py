@@ -80,17 +80,24 @@ def _union_mask(delta_masks: jax.Array):
     return union, union.sum().astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("width",))
-def _union_refs(delta_masks: jax.Array, union: jax.Array, width: int):
+@functools.partial(jax.jit, static_argnames=("width", "mesh"))
+def _union_refs(delta_masks: jax.Array, union: jax.Array, width: int,
+                mesh=None):
     (gids,) = jnp.nonzero(union, size=width, fill_value=-1)
     gids = gids.astype(jnp.int32)
     ref = delta_masks[:, jnp.clip(gids, 0)] & (gids >= 0)[None, :]
+    if mesh is not None:
+        from repro.sharding.fleet import constrain_fleet
+        # the union row axis shards over `slabs` (codec work parallelism);
+        # ref_mask rows stay with their client shard
+        gids = constrain_fleet(gids, ("union",), mesh)
+        ref = constrain_fleet(ref, ("clients", "union"), mesh)
     return gids, ref
 
 
 def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
                       delta_masks: jax.Array, budget: int,
-                      active=None) -> DeltaBatch:
+                      active=None, mesh=None) -> DeltaBatch:
     """Encode one sync's fleet Δcut once.
 
     delta_masks: (B, N) bool — the batched `SyncPlan.delta_data`.
@@ -105,14 +112,29 @@ def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
     await — the same bounded-recompilation pattern as the pooled stale-slab
     scheduler), so codec quantize/pack FLOPs track the sync's unique
     Gaussians, not the static budget: a steady-state sync with a tiny union
-    encodes a tiny bucket, never the whole budget."""
+    encodes a tiny bucket, never the whole budget.
+
+    Sharded fleets (`mesh`, repro.sharding.fleet): the union `any` over
+    clients is a CROSS-SHARD reduction — the union mask, its gids, and the
+    encoded payload come back REPLICATED across client shards (the
+    replicated-union fallback: every host holds the full multicast stream,
+    which is the wire model anyway — the stream is broadcast to every
+    client). Codec quantize/pack work is sharded along the union row axis
+    over the `slabs` mesh axis when the pow2 width divides; an indivisible
+    width replicates the encode (bitwise identical either way —
+    tests/test_sharding_fleet.py)."""
     if active is not None:
         delta_masks = delta_masks & active[:, None]
     union, n_union = _union_mask(delta_masks)
     n = int(jax.device_get(n_union))
     width = ls.pow2_bucket(n, budget)
-    gids, ref = _union_refs(delta_masks, union, width)
+    gids, ref = _union_refs(delta_masks, union, width, mesh=mesh)
     payload = comp.encode_rows(codec, gaussians, gids)
+    if mesh is not None:
+        from repro.sharding.fleet import constrain_fleet
+        payload = jax.tree_util.tree_map(
+            lambda a: constrain_fleet(
+                a, ("union",) + (None,) * (a.ndim - 1), mesh), payload)
     return DeltaBatch(union_gids=gids, n_union=n_union, payload=payload,
                       ref_mask=ref, overflow=n_union > jnp.int32(width))
 

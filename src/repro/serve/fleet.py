@@ -167,6 +167,33 @@ def pad_slots(batched, fresh, new_capacity: int):
     return jax.tree_util.tree_map(pad, batched, fresh)
 
 
+def take_slots(batched, perm):
+    """Gather slots `perm` (any length) from every leaf's leading capacity
+    axis — the shrink-side dual of `pad_slots`. With `perm` = [live slots in
+    slot order, enough FREE slots to fill the target capacity], the result
+    is a compacted fleet whose free slots are bitwise fresh — because the
+    frozen-inactive invariant already keeps every inactive slot at its
+    reset value, gathering one IS a reset (no `reset_slot` pass needed)."""
+    perm = jnp.asarray(perm, jnp.int32)
+    return jax.tree_util.tree_map(lambda b: b[perm], batched)
+
+
+def fleet_shrink(fleet: FleetState, perm) -> FleetState:
+    """Compact the fleet bookkeeping to the slots in `perm` (live first —
+    relative slot order of the survivors is preserved, so slot-order
+    dependent accounting like the encode-once first-requester split replays
+    bitwise). `next_id` is kept: client ids stay monotone across a shrink.
+    Host-side — like `fleet_grow`, a shrink is a lifecycle event that
+    changes compiled shapes (each jitted path retraces exactly once)."""
+    perm = jnp.asarray(perm, jnp.int32)
+    return FleetState(
+        active=fleet.active[perm],
+        generation=fleet.generation[perm],
+        client_ids=fleet.client_ids[perm],
+        next_id=fleet.next_id,
+    )
+
+
 def freeze_inactive(new, old, active: jax.Array):
     """Select `new` for active slots and `old` for inactive ones, leafwise
     (active broadcasts over every trailing axis). This is what makes an

@@ -52,11 +52,25 @@ rasterizer — and their per-slot state stays bitwise frozen at the reset
 value, so a surviving client's trajectory is bitwise identical to a
 fixed-size service of just the survivors (tests/test_fleet_churn.py).
 
+The service runs MESH-SHARDED when given a `clients`×`slabs` serving mesh
+(`LodService(mesh=...)` or the ambient
+`repro.sharding.fleet.use_fleet_mesh`): per-slot state shards on its
+leading slot axis over `clients` (each host owns a contiguous block of
+slots — its staleness pool, tables, and wire accounting live with its
+clients), the shared slab attribute tables and the union codec rows shard
+over `slabs`, the pooled staleness compaction becomes per-client-shard
+pow2 buckets (one per-shard count vector awaited instead of one scalar),
+and the Δ-union payload replicates across client shards (the multicast
+stream is broadcast to everyone anyway). With no mesh — or any indivisible
+layout — every constraint falls back to replicate and the service is
+bitwise the single-device one (tests/test_sharding_fleet.py).
+
 Per-sync, per-client byte and work accounting (`ServiceStats`, now including
 `unique_delta` / `dedup_bytes_saved`) feeds benchmarks/bench_multiclient.py,
-benchmarks/bench_fleet_sync.py and benchmarks/bench_fleet_churn.py (the
-multi-user analogs of the paper's bandwidth figures). Remaining follow-ons
-tracked in ROADMAP.md: sharding `ServiceState`/tree on the cloud mesh.
+benchmarks/bench_fleet_sync.py, benchmarks/bench_fleet_churn.py and
+benchmarks/bench_fleet_shard.py (the multi-user analogs of the paper's
+bandwidth figures); `repro.sharding.fleet.fleet_totals` psums the per-slot
+columns to fleet scalars across client shards.
 """
 
 from __future__ import annotations
@@ -78,7 +92,14 @@ from repro.core.pipeline import SessionConfig, session_wire_format
 from repro.kernels import lod_cut as lc
 from repro.serve import delta_path as dp
 from repro.serve import fleet as flt
+from repro.sharding import fleet as shd
 from repro import render as rnd
+
+
+class AdmissionDenied(RuntimeError):
+    """`LodService.admit` refused: the configured fleet budget (client count
+    or state-byte budget) is exhausted — backpressure instead of unbounded
+    capacity growth."""
 
 
 @jax.tree_util.register_dataclass
@@ -205,8 +226,9 @@ def service_evict_slot(state: ServiceState, slot) -> ServiceState:
 def service_grow(tree: LodTree, cfg: SessionConfig, state: ServiceState,
                  new_capacity: int) -> ServiceState:
     """Pad every slot-axis leaf to `new_capacity` (new slots free + fresh).
-    Host-side: growth is the ONE lifecycle event that changes compiled
-    shapes, so each jitted sync path retraces exactly once afterwards."""
+    Host-side: growth (and its dual, `service_shrink`) are the lifecycle
+    events that change compiled shapes, so each jitted sync path retraces
+    exactly once afterwards."""
     f_mgr, f_tmp, f_cut, f_idx = _fresh_slot_leaves(state)
     return ServiceState(
         mgr=flt.pad_slots(state.mgr, f_mgr, new_capacity),
@@ -217,21 +239,45 @@ def service_grow(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("budget",))
-def _batched_cut_gids(masks: jax.Array, budget: int):
+@jax.jit
+def service_shrink(state: ServiceState, perm) -> ServiceState:
+    """Compact the fleet into the `len(perm)` slots named by `perm` (live
+    slots first, in slot order, then free slots to fill the target
+    capacity) — capacity SHRINK, the dual of `service_grow`.
+
+    One gather per leaf (`fleet.take_slots`): survivors keep their exact
+    per-slot state (their replay is bitwise — every sync computation is
+    slot-parallel and the survivors' relative order is preserved), and the
+    gathered free slots are bitwise fresh by the frozen-inactive invariant.
+    The shape change retraces each jitted sync path exactly once — same
+    contract as growth, downward."""
+    return ServiceState(
+        mgr=flt.take_slots(state.mgr, perm),
+        temporal=flt.take_slots(state.temporal, perm),
+        cut_gids=flt.take_slots(state.cut_gids, perm),
+        sync_index=flt.take_slots(state.sync_index, perm),
+        fleet=flt.fleet_shrink(state.fleet, perm),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "mesh"))
+def _batched_cut_gids(masks: jax.Array, budget: int, mesh=None):
     def one(m):
         (g,) = jnp.nonzero(m, size=budget, fill_value=-1)
         return g.astype(jnp.int32), m.sum().astype(jnp.int32)
-    return jax.vmap(one)(masks)
+    gids, counts = jax.vmap(one)(masks)
+    gids = shd.constrain_fleet(gids, ("clients", None), mesh)
+    counts = shd.constrain_fleet(counts, ("clients",), mesh)
+    return gids, counts
 
 
 def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
                  temporal: ls.TemporalState, masks: jax.Array,
                  nodes_touched: jax.Array, resweeps: jax.Array,
                  bytes_per_g: float, codec: Optional[comp.Codec] = None,
-                 dedup: bool = False, delta_budget: Optional[int] = None
-                 ) -> Tuple[ServiceState, ServiceStats,
-                            Optional[dp.DeltaBatch]]:
+                 dedup: bool = False, delta_budget: Optional[int] = None,
+                 mesh=None) -> Tuple[ServiceState, ServiceStats,
+                                     Optional[dp.DeltaBatch]]:
     """Shared tail of both sync paths: batched management-table update,
     per-client render queues, the encode-once Δcut payload, and accounting.
 
@@ -246,20 +292,25 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     queues), the management-table update (their table stays bitwise frozen),
     the wire accounting (0.0 bytes, header included), the Δ-union encode,
     and the per-slot sync counter (it only ticks while active, so a slot's
-    counter always reads "syncs since this client was admitted")."""
+    counter always reads "syncs since this client was admitted").
+
+    Sharded fleets (`mesh`): everything per-client here stays on its client
+    shard (the table update, cut compaction, and wire accounting are
+    slot-parallel); the one cross-shard step is the Δ-union reduction, whose
+    payload replicates (repro.serve.delta_path)."""
     active = state.fleet.active
     masks = masks & active[:, None]
     new_mgr, plan = mgr.batched_cloud_sync(state.mgr, masks, state.sync_index,
                                            jnp.int32(cfg.w_star))
     new_mgr = flt.freeze_inactive(new_mgr, state.mgr, active)
-    gids, counts = _batched_cut_gids(masks, cfg.cut_budget)
+    gids, counts = _batched_cut_gids(masks, cfg.cut_budget, mesh=mesh)
     unicast = mgr.batched_wire_bytes(plan, bytes_per_g, active=active)
     batch = None
     if dedup:
         if codec is None or delta_budget is None:
             raise ValueError("dedup sync needs a codec and a delta_budget")
         batch = dp.build_delta_batch(tree.gaussians, codec, plan.delta_data,
-                                     delta_budget, active=active)
+                                     delta_budget, active=active, mesh=mesh)
         sync_bytes = mgr.batched_wire_bytes(plan, bytes_per_g,
                                             shared_payload=True,
                                             active=active)
@@ -285,6 +336,11 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
         client_resident=plan.n_resident,
         overflow=counts > cfg.cut_budget,
         delta_overflow=delta_overflow & active)
+    # pin the declared fleet layout on the outputs (no-op when meshless):
+    # every ServiceState/ServiceStats leaf leads with the slot axis and
+    # carries the client-shard NamedSharding the acceptance contract names
+    new_state = shd.shard_service_state(mesh, new_state)
+    stats = shd.shard_service_state(mesh, stats)
     return new_state, stats, batch
 
 
@@ -304,9 +360,9 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
                          bytes_per_g: float, taus=None,
                          codec: Optional[comp.Codec] = None,
                          dedup: bool = False,
-                         delta_budget: Optional[int] = None
-                         ) -> Tuple[ServiceState, ServiceStats,
-                                    Optional[dp.DeltaBatch]]:
+                         delta_budget: Optional[int] = None,
+                         mesh=None) -> Tuple[ServiceState, ServiceStats,
+                                             Optional[dp.DeltaBatch]]:
     """One LoD sync for every client, fully on-device (vmapped search).
 
     Exactness reference for the pooled scheduler; also the right path when
@@ -318,7 +374,13 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     is the price of this path), but inactive slots' temporal state is
     frozen back to its reset value afterwards, so the resulting state is
     bitwise identical to the pooled scheduler's — which never touches them
-    at all."""
+    at all.
+
+    Sharded fleets: `mesh` (explicit, or the ambient
+    `repro.sharding.fleet.use_fleet_mesh`) shards the whole search on the
+    clients axis — the vmapped sweep is slot-parallel, so each client shard
+    sweeps its own slots; results are bitwise the unsharded service's."""
+    mesh = shd.resolve_mesh(mesh)
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     cut, temporal = ls.batched_temporal_search(
@@ -329,55 +391,124 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     return _finish_sync(tree, cfg, state, temporal, masks,
                         cut.nodes_touched, cut.resweep.sum(axis=1),
                         bytes_per_g, codec=codec, dedup=dedup,
-                        delta_budget=delta_budget)
+                        delta_budget=delta_budget, mesh=mesh)
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("guard", "mesh"))
 def _apply_pooled_updates(slab_cut, root_expand, rho, cam0, sel_b, sel_s,
-                          f_cut, f_rexp, f_rho, cam_sel):
+                          f_cut, f_rexp, f_rho, cam_sel, valid=None, *,
+                          guard: bool = False, mesh=None):
     """Scatter pooled sweep results back into the batched temporal state.
-    Repeat-padded (client, slab) pairs write identical values — harmless."""
-    return (slab_cut.at[sel_b, sel_s].set(f_cut),
-            root_expand.at[sel_b, sel_s].set(f_rexp),
-            rho.at[sel_b, sel_s].set(f_rho),
-            cam0.at[sel_b, sel_s].set(cam_sel))
+    Repeat-padded (client, slab) pairs write identical values — harmless.
+
+    `guard` (static; only the sharded per-shard compaction sets it): a
+    client shard with ZERO stale pairs pads its bucket lanes with a
+    non-stale (slot 0, slab 0) pair — those lanes re-write the pair's
+    CURRENT values (gather-then-scatter in the same program), so an empty
+    shard's bucket is provably a no-op. The meshless global pool never pads
+    with non-stale pairs (count > 0 is guaranteed), so the unguarded program
+    is byte-identical to the pre-mesh service."""
+    if guard:
+        f_cut = jnp.where(valid[:, None], f_cut, slab_cut[sel_b, sel_s])
+        f_rexp = jnp.where(valid, f_rexp, root_expand[sel_b, sel_s])
+        f_rho = jnp.where(valid, f_rho, rho[sel_b, sel_s])
+        cam_sel = jnp.where(valid[:, None], cam_sel, cam0[sel_b, sel_s])
+    out = (slab_cut.at[sel_b, sel_s].set(f_cut),
+           root_expand.at[sel_b, sel_s].set(f_rexp),
+           rho.at[sel_b, sel_s].set(f_rho),
+           cam0.at[sel_b, sel_s].set(cam_sel))
+    if mesh is not None:
+        out = tuple(shd.constrain_fleet(
+            x, ("clients",) + (None,) * (x.ndim - 1), mesh) for x in out)
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("bucket",))
-def _compact_stale_pairs(stale: jax.Array, bucket: int):
-    """On-device compaction of the (B, Ns) staleness mask into a static
-    power-of-two bucket of (client, slab) indices.
+@functools.partial(jax.jit, static_argnames=("n_shards", "mesh"))
+def _shard_stale_counts(stale: jax.Array, n_shards: int, mesh=None):
+    """(n_shards,) stale-pair counts, one per client shard — the ONE host
+    transfer of a sharded pooled sync (each shard's count picks the shared
+    per-shard pow2 bucket; their sum is the fleet pool size)."""
+    counts = stale.reshape(n_shards, -1).sum(axis=1).astype(jnp.int32)
+    return shd.constrain_fleet(counts, ("clients",), mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket", "n_shards", "mesh"))
+def _compact_stale_pairs(stale: jax.Array, bucket: int, n_shards: int = 1,
+                         mesh=None):
+    """On-device compaction of the (B, Ns) staleness mask into per-client-
+    shard power-of-two buckets of (client, slab) indices.
 
     Replaces the old host `np.nonzero(stale)` round-trip: the cumsum-based
-    `jnp.nonzero(..., size=bucket)` runs inside the program, and the bucket
-    is repeat-padded with earlier stale pairs (idx[i mod count], exactly the
-    old `np.resize` cycle) so padded lanes rewrite identical values. Only
-    the static `bucket` size — chosen from the pool-size scalar — crosses to
-    the host."""
-    ns = stale.shape[1]
-    flat = stale.reshape(-1)
-    count = flat.sum()
-    (idx,) = jnp.nonzero(flat, size=bucket, fill_value=0)
-    sel = idx[jnp.arange(bucket) % jnp.maximum(count, 1)]
-    return sel // ns, sel % ns
+    `jnp.nonzero(..., size=bucket)` runs inside the program, and each
+    shard's bucket is repeat-padded with its earlier stale pairs
+    (idx[i mod count], exactly the old `np.resize` cycle) so padded lanes
+    rewrite identical values. Only the static `bucket` size — chosen from
+    the per-shard count scalars — crosses to the host.
+
+    With `n_shards` > 1 (a mesh whose `clients` axis divides the capacity)
+    every shard compacts its OWN (C/k, Ns) block into its own bucket — the
+    compaction is embarrassingly shard-parallel and no staleness mask ever
+    crosses shards (the cross-host staleness pool). A shard with zero stale
+    pairs marks its lanes invalid (`valid` false) so the scatter can skip
+    them; `n_shards=1` reduces exactly to the old single global bucket.
+
+    Returns (sel_b, sel_s, valid), each (n_shards * bucket,) with global
+    slot indices."""
+    b, ns = stale.shape
+    flat = stale.reshape(n_shards, -1)           # (k, (B/k)*Ns)
+    flat = shd.constrain_fleet(flat, ("clients", None), mesh)
+
+    def one(f):
+        count = f.sum()
+        (idx,) = jnp.nonzero(f, size=bucket, fill_value=0)
+        sel = idx[jnp.arange(bucket) % jnp.maximum(count, 1)]
+        return sel, jnp.broadcast_to(count > 0, (bucket,))
+
+    sel, valid = jax.vmap(one)(flat)             # (k, bucket) shard-local
+    base = (jnp.arange(n_shards, dtype=sel.dtype)
+            * (b // n_shards))[:, None]          # shard → first global slot
+    sel_b = (base + sel // ns).reshape(-1)
+    sel_s = (sel % ns).reshape(-1)
+    valid = valid.reshape(-1)
+    if mesh is not None:
+        sel_b = shd.constrain_fleet(sel_b, ("clients",), mesh)
+        sel_s = shd.constrain_fleet(sel_s, ("clients",), mesh)
+        valid = shd.constrain_fleet(valid, ("clients",), mesh)
+    return sel_b, sel_s, valid
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_depth", "impl", "interpret"))
+                   static_argnames=("max_depth", "impl", "interpret", "mesh"))
 def _pooled_pair_sweep(tables: ls.SlabTables, rpe, cams, taus, sel_b, sel_s,
-                       focal, *, max_depth: int, impl: str, interpret: bool):
+                       focal, *, max_depth: int, impl: str, interpret: bool,
+                       mesh=None):
     """Gather the pooled pairs' slab attributes from the device-resident
     tables and sweep them — ONE fused program (the gathers never detour
     through the host). `impl` picks the vmapped XLA sweep or the Pallas
-    lod-cut kernel (`repro.kernels.lod_cut.lod_pair_sweep_pallas`)."""
-    args = (tables.mu[sel_s], tables.size[sel_s], tables.parent[sel_s],
-            tables.level[sel_s], tables.is_leaf[sel_s], tables.valid[sel_s],
-            rpe[sel_b, sel_s], cams[sel_b])
+    lod-cut kernel (`repro.kernels.lod_cut.lod_pair_sweep_pallas`).
+
+    Sharded fleets: the pair axis is constrained onto the `clients` axis
+    (each shard's bucket lanes sweep on that shard); the slab-table gathers
+    cross the `slabs` axis, where the partitioner inserts the collectives —
+    the XLA sweep partitions cleanly. The Pallas kernel is a single opaque
+    dispatch the partitioner cannot split, so under a mesh its pair inputs
+    are explicitly REPLICATED first (correct but not scaled — prefer
+    impl='xla' on a mesh)."""
+    gathered = (tables.mu[sel_s], tables.size[sel_s], tables.parent[sel_s],
+                tables.level[sel_s], tables.is_leaf[sel_s],
+                tables.valid[sel_s], rpe[sel_b, sel_s], cams[sel_b])
+    tau_sel = taus[sel_b]
     if impl == "pallas":
-        return lc.lod_pair_sweep_pallas(*args, focal, taus[sel_b],
+        gathered, tau_sel = shd.replicate_fleet(mesh, (gathered, tau_sel))
+        return lc.lod_pair_sweep_pallas(*gathered, focal, tau_sel,
                                         max_depth=max_depth,
                                         interpret=interpret)
-    return ls.sweep_slab_camera_pairs(*args, focal, taus[sel_b], max_depth)
+    if mesh is not None:
+        gathered = tuple(shd.constrain_fleet(
+            g, ("clients",) + (None,) * (g.ndim - 1), mesh) for g in gathered)
+        tau_sel = shd.constrain_fleet(tau_sel, ("clients",), mesh)
+    return ls.sweep_slab_camera_pairs(*gathered, focal, tau_sel, max_depth)
 
 
 def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
@@ -387,9 +518,9 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         dedup: bool = False,
                         delta_budget: Optional[int] = None,
                         tables: Optional[ls.SlabTables] = None,
-                        sweep_impl: str = "xla", interpret: bool = True
-                        ) -> Tuple[ServiceState, ServiceStats,
-                                   Optional[dp.DeltaBatch]]:
+                        sweep_impl: str = "xla", interpret: bool = True,
+                        mesh=None) -> Tuple[ServiceState, ServiceStats,
+                                            Optional[dp.DeltaBatch]]:
     """One LoD sync for every client with cross-client slab pooling.
 
     The batched analog of `temporal_search_hybrid`, now device-scheduled:
@@ -413,36 +544,61 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     slab views. `sweep_impl` = "xla" | "pallas" picks the bucket sweep
     implementation (bit-parity tested).
 
+    Sharded fleets (`mesh`, explicit or ambient): the staleness pool is
+    PER CLIENT SHARD — each shard compacts its own slots' stale pairs into
+    its own pow2 bucket (`_compact_stale_pairs(n_shards=k)`), the host
+    awaits one (k,) per-shard count vector instead of one scalar (their max
+    picks the shared bucket size, their sum is the fleet pool), and the
+    bucketed sweep runs shard-parallel on the clients axis while its slab
+    gathers cross the `slabs` axis. Results are bitwise the unsharded
+    service's: repeat-padding differs per shard but padded lanes rewrite
+    identical values, and an empty shard's lanes are guarded no-ops.
+
     NOTE: like `temporal_search_hybrid`, the scatter donates the incoming
     `state.temporal` buffers (no (B, Ns, S) re-copy per sync). On backends
     that honor donation the input state is CONSUMED — keep using the
     returned state, never the argument."""
     m = tree.meta
+    mesh = shd.resolve_mesh(mesh)
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     active = state.fleet.active
     if tables is None:
-        tables = ls.SlabTables.from_tree(tree)
+        tables = ls.SlabTables.from_tree(tree, mesh=mesh)
     # inactive slots report zero staleness, so they never enter the pool:
-    # sweep work (and the pool-size scalar below) tracks the ACTIVE fleet
+    # sweep work (and the pool-size scalars below) tracks the ACTIVE fleet
     top_cut, rpe, stale = ls.batched_top_and_staleness(
-        tree, state.temporal, cams, jnp.float32(focal), tau_b, active)
-    # the ONE host synchronization of the sync: the pool-size scalar
-    n_stale = int(jax.device_get(stale.sum()))
+        tree, state.temporal, cams, jnp.float32(focal), tau_b, active,
+        mesh=mesh)
+    k = shd.client_shards(mesh, stale.shape[0])
+    # the ONE host synchronization of the sync: pool-size scalars — global
+    # for the meshless service, one per client shard under a mesh
+    if k > 1:
+        shard_counts = np.asarray(
+            jax.device_get(_shard_stale_counts(stale, k, mesh=mesh)))
+        n_stale = int(shard_counts.sum())
+    else:
+        n_stale = int(jax.device_get(stale.sum()))
     n_pairs = stale.shape[0] * stale.shape[1]
 
     tp = state.temporal
     slab_cut, root_expand, rho, cam0 = (tp.slab_cut0, tp.root_expand0,
                                         tp.rho, tp.cam0)
     if n_stale > 0:
-        bucket = ls.pow2_bucket(n_stale, n_pairs)
-        sel_b, sel_s = _compact_stale_pairs(stale, bucket)
+        if k > 1:
+            bucket = ls.pow2_bucket(int(shard_counts.max()), n_pairs // k)
+        else:
+            bucket = ls.pow2_bucket(n_stale, n_pairs)
+        sel_b, sel_s, valid = _compact_stale_pairs(stale, bucket,
+                                                   n_shards=k, mesh=mesh)
         f_cut, f_rexp, f_rho = _pooled_pair_sweep(
             tables, rpe, cams, tau_b, sel_b, sel_s, jnp.float32(focal),
-            max_depth=m.slab_max_depth, impl=sweep_impl, interpret=interpret)
+            max_depth=m.slab_max_depth, impl=sweep_impl, interpret=interpret,
+            mesh=mesh)
         slab_cut, root_expand, rho, cam0 = _apply_pooled_updates(
             slab_cut, root_expand, rho, cam0, sel_b, sel_s,
-            f_cut, f_rexp, f_rho, cams[sel_b])
+            f_cut, f_rexp, f_rho, cams[sel_b], valid, guard=k > 1,
+            mesh=mesh)
 
     # the active-masked scatter never touches an inactive slot's donated
     # buffers; freeze the two non-donated leaves the same way so inactive
@@ -459,7 +615,7 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks, nodes_touched,
                         stale.sum(axis=1), bytes_per_g, codec=codec,
-                        dedup=dedup, delta_budget=delta_budget)
+                        dedup=dedup, delta_budget=delta_budget, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -476,7 +632,7 @@ def _masked_queue(gaussians: Gaussians, gids: jax.Array) -> Gaussians:
 
 def service_render_step(tree: LodTree, state: ServiceState, rigs,
                         rcfg: "rnd.RenderConfig", *, path: str = "vmap",
-                        interpret: bool = True):
+                        interpret: bool = True, mesh=None):
     """Render EVERY client's current cut queue cloud-side in one batched
     stereo dispatch (the fallback tier of Fig. 10: headsets too weak to run
     the client rasterizer receive pixels, not Gaussians).
@@ -491,12 +647,18 @@ def service_render_step(tree: LodTree, state: ServiceState, rigs,
     Ragged fleets: inactive slots' queues are empty (-1 cut everywhere) and
     their slots are masked out of the pooled occupied-tile bucket, so fleet
     rasterization work tracks live clients — inactive slots just return
-    black frames."""
+    black frames.
+
+    Sharded fleets: `mesh` (explicit or ambient) shards the queues and the
+    returned fallback frames on the `clients` axis — each client shard
+    rasterizes (and holds the pixels of) its own slots."""
+    mesh = shd.resolve_mesh(mesh)
     queues = jax.vmap(lambda g: _masked_queue(tree.gaussians, g)
                       )(state.cut_gids)
+    queues = shd.shard_service_state(mesh, queues)
     return rnd.batched_render_stereo(queues, rigs, rcfg, path=path,
                                      interpret=interpret,
-                                     active=state.fleet.active)
+                                     active=state.fleet.active, mesh=mesh)
 
 
 class LodService:
@@ -524,17 +686,28 @@ class LodService:
     a pow2 bucket). Admits/evicts within the capacity bucket are jitted
     slot scatters — zero recompiles; an admit that outgrows the bucket pads
     to `lod_search.pow2_bucket(capacity + 1)` and retraces each jitted path
-    exactly once. Clients are addressed by their stable id everywhere
+    exactly once; `maybe_shrink()` is the downward dual (compact a sparse
+    fleet into the smaller pow2 bucket — one retrace, survivors replay
+    bitwise). `max_clients` / `max_state_bytes` switch growth to
+    backpressure: a budget-exceeding `admit` raises `AdmissionDenied` (or
+    returns None with `required=False`) and leaves the service untouched.
+    Clients are addressed by their stable id everywhere
     (`sync` dicts, `client_cut`, `client_delta`, `client_tau`); for a
     never-churned service ids coincide with 0..B-1, so the legacy positional
-    API keeps working unchanged."""
+    API keeps working unchanged.
+
+    `mesh` installs the clients×slabs serving mesh (see the module
+    docstring; `launch.make_fleet_mesh`) — sync, lifecycle, and fallback
+    render all run sharded, bitwise-identical to the meshless service."""
 
     def __init__(self, tree: LodTree, cfg: SessionConfig, n_clients: int,
                  focal: float, mode: str = "pooled", taus=None,
                  dedup: bool = True, sweep_impl: str = "xla",
                  interpret: bool = True,
                  delta_budget: Optional[int] = None,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None,
+                 mesh=None, max_clients: Optional[int] = None,
+                 max_state_bytes: Optional[float] = None):
         if mode not in ("pooled", "vmapped"):
             raise ValueError(f"unknown scheduler mode: {mode!r}")
         if sweep_impl not in ("xla", "pallas"):
@@ -544,6 +717,15 @@ class LodService:
                              "sweep; use mode='pooled'")
         self.tree = tree
         self.cfg = cfg
+        # the serving mesh (explicit, else the ambient use_fleet_mesh one):
+        # clients axis shards per-slot state, slabs axis shards the shared
+        # slab tables + union codec rows; None = the single-device service
+        self.mesh = shd.resolve_mesh(mesh)
+        # admission control (backpressure): deny instead of growing past a
+        # live-client count or a total state-byte budget
+        self.max_clients = None if max_clients is None else int(max_clients)
+        self.max_state_bytes = (None if max_state_bytes is None
+                                else float(max_state_bytes))
         self.capacity = (max(int(n_clients), 1) if capacity is None
                          else int(capacity))
         if self.capacity < max(n_clients, 1):
@@ -583,11 +765,13 @@ class LodService:
                                       cfg.cut_budget * self.capacity))
         # device-resident slab tables: gathered once, reused by every pooled
         # sweep (the per-sync program starts at the pair gather); the
-        # vmapped reference path never reads them, so don't hold the copy
-        self.tables = (ls.SlabTables.from_tree(tree) if mode == "pooled"
-                       else None)
-        self.state = service_init(tree, cfg, n_clients,
-                                  capacity=self.capacity)
+        # vmapped reference path never reads them, so don't hold the copy.
+        # Under a mesh the tables shard on the slabs axis at placement.
+        self.tables = (ls.SlabTables.from_tree(tree, mesh=self.mesh)
+                       if mode == "pooled" else None)
+        self.state = shd.shard_service_state(
+            self.mesh, service_init(tree, cfg, n_clients,
+                                    capacity=self.capacity))
         self.last_delta: Optional[dp.DeltaBatch] = None
         self._delta_ids = np.full(self.capacity, -1, np.int64)
         self._rcfg_cache = {}
@@ -619,14 +803,53 @@ class LodService:
         slot = self._slot_of(client_id)
         return float(self.cfg.tau if self.taus is None else self.taus[slot])
 
-    def admit(self, cam=None, tau: Optional[float] = None) -> int:
+    def _slot_state_bytes(self) -> float:
+        """Per-slot device bytes of the service state (all slot-axis leaves
+        of `ServiceState`, capacity-normalized) — the unit the admission
+        byte budget is charged in."""
+        total = sum(int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+                    for a in jax.tree_util.tree_leaves(self.state)
+                    if getattr(a, "ndim", 0) >= 1)
+        return float(total) / self.capacity
+
+    def _admission_denial(self) -> Optional[str]:
+        """Why the next admit must be refused (None = admissible). Checked
+        BEFORE any state mutation, so a denied admit is side-effect free."""
+        if self.max_clients is not None \
+                and self.n_clients + 1 > self.max_clients:
+            return (f"live clients {self.n_clients} at the configured "
+                    f"max_clients={self.max_clients}")
+        if self.max_state_bytes is not None and not (~self._active).any():
+            # a full fleet must GROW to admit — deny if the grown slot
+            # array would blow the byte budget (in-bucket admits are free)
+            grown = flt.fleet_capacity(self.capacity + 1)
+            need = self._slot_state_bytes() * grown
+            if need > self.max_state_bytes:
+                return (f"growing {self.capacity}->{grown} slots needs "
+                        f"{need:.0f} state bytes > max_state_bytes="
+                        f"{self.max_state_bytes:.0f}")
+        return None
+
+    def admit(self, cam=None, tau: Optional[float] = None,
+              required: bool = True) -> Optional[int]:
         """Admit one client; returns its stable id. The new slot starts
         fully stale, so the client's first sync is a cold full sweep and a
         cold Δcut. Within the current capacity bucket this is a jitted slot
         scatter (zero recompiles); on a full fleet the capacity grows to the
         next pow2 bucket first (one retrace of each jitted path). `cam`
         seeds the slot's camera (used until the next `sync` provides one);
-        `tau` its foveated threshold (default cfg.tau)."""
+        `tau` its foveated threshold (default cfg.tau).
+
+        Admission control: with `max_clients` / `max_state_bytes`
+        configured, an admit past the budget is DENIED instead of growing
+        unboundedly — raising `AdmissionDenied` (`required=True`, the
+        default) or returning None (`required=False`, for callers that
+        queue and retry). A denied admit leaves the service untouched."""
+        denial = self._admission_denial()
+        if denial is not None:
+            if required:
+                raise AdmissionDenied(denial)
+            return None
         free = np.flatnonzero(~self._active)
         if free.size == 0:
             if self.capacity >= flt.MAX_CAPACITY:
@@ -636,7 +859,8 @@ class LodService:
         slot = int(free[0])
         client_id = self._next_id
         self._next_id += 1
-        self.state = service_admit_slot(self.state, slot, client_id)
+        self.state = shd.shard_service_state(
+            self.mesh, service_admit_slot(self.state, slot, client_id))
         self._active[slot] = True
         self._client_ids[slot] = client_id
         self._slot_cams[slot] = (np.zeros(3, np.float32) if cam is None
@@ -654,7 +878,8 @@ class LodService:
         traffic results: both sides run the shared reuse rule, and the
         vacated slot contributes nothing to any later sync."""
         slot = self._slot_of(client_id)
-        self.state = service_evict_slot(self.state, slot)
+        self.state = shd.shard_service_state(
+            self.mesh, service_evict_slot(self.state, slot))
         self._active[slot] = False
         self._client_ids[slot] = -1
         self._slot_cams[slot] = 0.0
@@ -666,8 +891,9 @@ class LodService:
         included). The stacked-rig / RenderConfig caches are dropped: their
         signatures include the capacity bucket, and the pinned pytrees have
         the old leading axis."""
-        self.state = service_grow(self.tree, self.cfg, self.state,
-                                  new_capacity)
+        self.state = shd.shard_service_state(
+            self.mesh, service_grow(self.tree, self.cfg, self.state,
+                                    new_capacity))
         pad = new_capacity - self.capacity
         self._active = np.concatenate([self._active, np.zeros(pad, bool)])
         self._client_ids = np.concatenate(
@@ -677,12 +903,63 @@ class LodService:
         if self.taus is not None:
             self.taus = np.concatenate(
                 [self.taus, np.full(pad, self.cfg.tau, np.float32)])
+        # new slots have no slice in the latest payload (tenancy -1); the
+        # pinned last_delta.ref_mask keeps its pre-growth leading dim — the
+        # shrink remap and client_delta both handle the short payload
+        self._delta_ids = np.concatenate(
+            [self._delta_ids, np.full(pad, -1, np.int64)])
         self.capacity = new_capacity
         if self._delta_budget_arg is None:
             self.delta_budget = min(self.tree.n_pad,
                                     self.cfg.cut_budget * self.capacity)
         self._rcfg_cache.clear()
         self._stack_cache.clear()
+
+    def maybe_shrink(self) -> Optional[int]:
+        """Capacity SHRINK: if the live fleet fits a smaller pow2 bucket,
+        compact the live slots to the front (slot order preserved) and
+        truncate every slot-axis array to that bucket. Returns the new
+        capacity, or None when already right-sized.
+
+        One retrace: the shape change costs each jitted sync path exactly
+        one new trace (the growth contract, downward). Survivors replay
+        bitwise — every per-sync computation is slot-parallel and the
+        survivors keep their relative order, so the pooled sweep, Δ-union
+        stream, and first-requester byte split are unchanged. The latest
+        encode-once payload's ref-mask rows are remapped through the same
+        permutation, so `client_delta` keeps working across the shrink."""
+        target = flt.fleet_capacity(max(self.n_clients, 1))
+        if target >= self.capacity:
+            return None
+        live = np.flatnonzero(self._active)
+        free = np.flatnonzero(~self._active)
+        perm = np.concatenate([live, free])[:target].astype(np.int32)
+        self.state = shd.shard_service_state(
+            self.mesh, service_shrink(self.state, jnp.asarray(perm)))
+        self._active = self._active[perm]
+        self._client_ids = self._client_ids[perm]
+        self._slot_cams = self._slot_cams[perm]
+        if self.taus is not None:
+            self.taus = self.taus[perm]
+        self.capacity = target
+        if self._delta_budget_arg is None:
+            self.delta_budget = min(self.tree.n_pad,
+                                    self.cfg.cut_budget * self.capacity)
+        if self.last_delta is not None:
+            # the payload may predate a capacity growth (ref_mask rows =
+            # the capacity at its sync): slots beyond it have no slice —
+            # give them an all-False row (their _delta_ids entry is -1, so
+            # client_delta already refuses them)
+            ref = self.last_delta.ref_mask
+            safe = np.minimum(perm, ref.shape[0] - 1)
+            remapped = jnp.where((perm < ref.shape[0])[:, None], ref[safe],
+                                 False)
+            self.last_delta = dataclasses.replace(self.last_delta,
+                                                  ref_mask=remapped)
+        self._delta_ids = self._delta_ids[perm]
+        self._rcfg_cache.clear()
+        self._stack_cache.clear()
+        return target
 
     # -- sync -----------------------------------------------------------------
 
@@ -708,7 +985,7 @@ class LodService:
                                  f"positions, got {cams.shape}")
             self._slot_cams[self._active] = cams
         kw = dict(taus=self.taus, codec=self.codec, dedup=self.dedup,
-                  delta_budget=self.delta_budget)
+                  delta_budget=self.delta_budget, mesh=self.mesh)
         if self.mode == "pooled":
             self.state, stats, batch = service_sync_pooled(
                 self.tree, self.cfg, self.state, self._slot_cams, self.focal,
@@ -839,4 +1116,5 @@ class LodService:
                     n_cat=n_categories(max_disp, tile))
                 self._rcfg_cache[static_sig] = rcfg
         return service_render_step(self.tree, self.state, rigs, rcfg,
-                                   path=path, interpret=interpret)
+                                   path=path, interpret=interpret,
+                                   mesh=self.mesh)

@@ -1,4 +1,10 @@
 from repro.sharding.context import (activation_rules, constrain,
                                     current_rules, use_rules)
-from repro.sharding.partitioning import (logical_to_pspec, make_shardings,
-                                         LOGICAL_RULES)
+from repro.sharding.partitioning import (axes_for_dim, logical_to_pspec,
+                                         make_shardings, LOGICAL_RULES)
+from repro.sharding.fleet import (FLEET_RULES, constrain_fleet,
+                                  current_fleet_mesh, fleet_axis_rules,
+                                  fleet_shardings, fleet_totals,
+                                  replicate_fleet, shard_service_state,
+                                  shard_slab_tables, slab_shardings,
+                                  use_fleet_mesh)

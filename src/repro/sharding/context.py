@@ -14,6 +14,8 @@ from typing import Dict, Optional, Tuple
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.partitioning import _spec_entry, axes_for_dim
+
 _RULES: contextvars.ContextVar[Optional[Dict[str, Tuple[str, ...]]]] = (
     contextvars.ContextVar("logical_axis_rules", default=None))
 
@@ -75,23 +77,19 @@ def bshard(x: jax.Array) -> jax.Array:
 
 def constrain(x: jax.Array, logical: Tuple[Optional[str], ...]) -> jax.Array:
     """Apply a sharding constraint if a context is active (else no-op).
-    Axes that do not divide the corresponding dim are dropped."""
+    Axes that do not divide the corresponding dim are dropped — via the SAME
+    `partitioning.axes_for_dim` rule the weight-sharding path uses (one
+    shared helper, so a multi-axis product can't be checked one way here and
+    another way there; with partially-known `__sizes__` the old local check
+    multiplied only the known axes and could silently drop a divisible
+    multi-axis split)."""
     rules = _RULES.get()
     if rules is None:
         return x
-    sizes = rules.get("__sizes__", {})
+    sizes = rules.get("__sizes__") or None
     spec = []
     for i, name in enumerate(logical):
-        if name is None:
-            spec.append(None)
-            continue
-        axes = tuple(a for a in rules.get(name, ()))
-        if axes and sizes:
-            div = 1
-            for a in axes:
-                div *= sizes.get(a, 1)
-            if div and x.shape[i] % div != 0:
-                spec.append(None)
-                continue
-        spec.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        axes = axes_for_dim(name, x.shape[i], rules, mesh_names=None,
+                            mesh_sizes=sizes)
+        spec.append(_spec_entry(axes))
     return jax.lax.with_sharding_constraint(x, P(*spec))

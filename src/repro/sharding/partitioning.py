@@ -41,6 +41,38 @@ LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
 }
 
 
+def axes_for_dim(name: Optional[str], dim: Optional[int],
+                 rules: Dict[str, Tuple[str, ...]],
+                 mesh_names=None, mesh_sizes=None) -> Tuple[str, ...]:
+    """Mesh axes for ONE logical dimension — the single divisibility /
+    replicate-fallback rule shared by `logical_to_pspec` (weights) and
+    `context.constrain` (activations), so the two paths cannot drift.
+
+      * axes absent from `mesh_names` are dropped (no filter when None);
+      * if `dim` is known and EVERY remaining axis has a known size, the
+        full multi-axis product must divide `dim` — otherwise the whole
+        dimension falls back to replicated (never a partial split);
+      * if any axis size is unknown (mesh given as bare axis names),
+        divisibility is unknowable and is not enforced.
+
+    Returns the surviving mesh axes, possibly () (= replicate)."""
+    axes = tuple(rules.get(name, ())) if name is not None else ()
+    if mesh_names is not None:
+        axes = tuple(a for a in axes if a in mesh_names)
+    if not axes:
+        return ()
+    if dim is not None and mesh_sizes is not None \
+            and all(a in mesh_sizes for a in axes):
+        div = int(np.prod([mesh_sizes[a] for a in axes]))
+        if div and dim % div != 0:
+            return ()  # indivisible → replicate this dim
+    return axes
+
+
+def _spec_entry(axes: Tuple[str, ...]):
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
 def logical_to_pspec(logical: Tuple[Optional[str], ...], mesh: Mesh,
                      shape: Optional[Tuple[int, ...]] = None,
                      rules: Optional[Dict[str, Tuple[str, ...]]] = None) -> P:
@@ -52,16 +84,9 @@ def logical_to_pspec(logical: Tuple[Optional[str], ...], mesh: Mesh,
         if name is None:
             spec.append(None)
             continue
-        axes = tuple(a for a in rules.get(name, ()) if a in names)
-        if not axes:
-            spec.append(None)
-            continue
-        if shape is not None:
-            div = int(np.prod([sizes[a] for a in axes]))
-            if shape[i] % div != 0:
-                spec.append(None)  # indivisible → replicate this dim
-                continue
-        spec.append(axes if len(axes) > 1 else axes[0])
+        axes = axes_for_dim(name, None if shape is None else shape[i],
+                            rules, mesh_names=names, mesh_sizes=sizes)
+        spec.append(_spec_entry(axes))
     return P(*spec)
 
 
