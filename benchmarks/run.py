@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_fleet_sync",   # encode-once fleet sync (dedup × B)
     "benchmarks.bench_fleet_churn",  # ragged fleet lifecycle (admit/evict)
     "benchmarks.bench_fleet_shard",  # mesh-sharded fleet (clients × slabs)
+    "benchmarks.bench_delta_stream",  # paged Δ stream (pressure × tier)
     "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24
     "benchmarks.bench_stereo",       # Figs. 8/21
     "benchmarks.bench_stereo_batched",  # fleet-batched client rendering

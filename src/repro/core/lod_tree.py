@@ -106,6 +106,20 @@ class LodTree:
             [jnp.ones((m.T,), bool), self.slab_valid.reshape(-1)], axis=0
         )
 
+    def node_levels(self) -> jax.Array:
+        """(N_pad,) int32 — global tree depth of every padded node id (root
+        = 0; padding rows get a huge sentinel so they sort last). Top-tree
+        rows read their level off `top_level_offsets`; slab rows are the
+        partition level P plus their slab-local level. This is the
+        coarse-first priority key of the paged Δ-union stream
+        (repro.serve.delta_path): low depth = coarse LoD = ships first."""
+        m = self.meta
+        bounds = np.asarray(m.top_level_offsets[1:], np.int64)  # ends of 0..P-1
+        top = np.searchsorted(bounds, np.arange(m.T), side="right")
+        top_lv = jnp.asarray(top.astype(np.int32))
+        slab_lv = jnp.minimum(self.slab_level, jnp.int32(2**30 - m.P)) + m.P
+        return jnp.concatenate([top_lv, slab_lv.reshape(-1)], axis=0)
+
 
 # ---------------------------------------------------------------------------
 # Offline construction

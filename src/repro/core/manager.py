@@ -32,6 +32,8 @@ ID_BYTES = 4          # plain 32-bit ids on the wire
 ID_BYTES_DELTA = 2    # delta-coded ids (sorted ascending, varint-ish) — model
 SYNC_HEADER_BYTES = 64
 POSE_UPLINK_BYTES = 100  # client → cloud pose per frame (paper §2.1)
+PAGE_HEADER_BYTES = 16  # per priority page of the paged multicast stream
+#                         (page rank, row count, first gid, checksum)
 
 
 @jax.tree_util.register_dataclass
@@ -156,7 +158,8 @@ def batched_cloud_sync(states: ManagerState, cut_masks: jax.Array,
 
 def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float, *,
                        shared_payload: bool = False,
-                       active=None) -> jax.Array:
+                       active=None, delivered=None,
+                       client_pages=None) -> jax.Array:
     """(B,) per-client downlink bytes for a batched SyncPlan.
 
     (`SyncPlan.wire_bytes` reduces over every axis and is only correct for the
@@ -178,11 +181,21 @@ def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float, *,
     path (whose Δ ids are implicit), so a fully disjoint fleet pays a small
     id overhead; sharing by ≥2 clients is always a win.
 
+    `delivered` is an optional (B, N) bool mask of the rows each client
+    ACTUALLY ingested this sync (`DeltaBatch.delivered` from the paged
+    stream, repro.serve.delta_path). Without it the shared split charges
+    `plan.delta_data` — every requested row, INCLUDING rows a tight
+    `delta_budget` paged out of the stream; pass it so deferred rows cost
+    nothing until the sync that ships them (the silent-overcharge bug the
+    paged stream fixes). `client_pages` ((B,) int32, same source) adds the
+    per-page framing: PAGE_HEADER_BYTES for each priority page the client
+    pulled rows from.
+
     `active` is an optional (B,) bool slot mask (ragged fleets,
     repro.serve.fleet): an inactive slot receives NOTHING — not even the
     sync header — so its row is exactly 0.0 bytes, and inactive slots are
     excluded from the shared-row requester split."""
-    delta = plan.delta_data
+    delta = plan.delta_data if delivered is None else delivered
     if active is not None:
         delta = delta & active[:, None]
     ids = (plan.cut_add.sum(axis=1) + plan.cut_remove.sum(axis=1)
@@ -195,6 +208,8 @@ def batched_wire_bytes(plan: SyncPlan, bytes_per_gaussian: float, *,
         frac = jnp.where(delta,
                          1.0 / jnp.maximum(share, 1)[None, :], 0.0).sum(axis=1)
         out = frac * (bytes_per_gaussian + ID_BYTES_DELTA) + base
+        if client_pages is not None:
+            out = out + client_pages.astype(jnp.float32) * PAGE_HEADER_BYTES
     if active is not None:
         out = jnp.where(active, out, 0.0)
     return out

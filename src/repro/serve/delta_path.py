@@ -15,9 +15,20 @@ the *same* Gaussians. This module rebuilds that data path around the fleet's
     `ref_mask[b]` is set, in the same ascending-gid order the per-client
     path would have produced — so decode-side payloads are bitwise identical
     to encode-per-client (proven in tests/test_delta_path.py);
+  * when the sync's union exceeds the stream budget the union is **paged**,
+    never truncated: rows are ranked coarse-LoD-first (low tree depth, ties
+    by fleet requester count, then gid), the top `budget` ranks ship this
+    sync as `page_size`-row priority pages, and every row left behind is
+    reported in `DeltaBatch.deferred` — the service carries it into the
+    NEXT sync's union as forced-stale membership, so a client's store
+    converges bitwise to the unbudgeted oracle in ≤ ⌈U/width⌉ syncs
+    (tests/test_delta_path.py). Per-client `allowance` caps the rows a
+    single client ingests per sync (the closed-loop bitrate controller in
+    repro.serve.lod_service sets it from measured wire bytes);
   * the wire model is a shared multicast stream + thin per-client framing:
 
-        shared   : union gids (delta-coded ids) + encoded attribute rows
+        shared   : page headers + union gids (delta-coded ids, ascending
+                   within each page) + encoded attribute rows
         per-client: cut add/remove ids + sync header  (unchanged)
 
     A client filters the shared stream by itself: it knows its render cut
@@ -28,7 +39,10 @@ the *same* Gaussians. This module rebuilds that data path around the fleet's
 
 `manager.batched_wire_bytes(..., shared_payload=True)` holds the byte
 accounting for this format (each shared row's cost split across its
-requesters, so per-client stats still sum to fleet totals).
+requesters, so per-client stats still sum to fleet totals) — it charges a
+client only for rows it actually ingested this sync (`DeltaBatch.delivered`)
+plus `PAGE_HEADER_BYTES` per priority page it pulled rows from; deferred
+rows cost nothing until they ship.
 
 The single-client `core.pipeline` path keeps the old unicast wire format via
 `compression.encode_rows` (same gather + codec helper, B=1, no union
@@ -52,21 +66,44 @@ from repro.core.gaussians import Gaussians
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DeltaBatch:
-    """One sync's encode-once fleet payload.
+    """One sync's encode-once fleet payload (one page-set of the union).
 
-    union_gids: (U,) int32 — ascending global ids of the fleet-union Δcut,
-                -1 padded (U is the static union budget)
-    n_union:    () int32 — real union size (== unique Gaussians this sync)
+    union_gids: (U,) int32 — ascending global ids of the rows SHIPPED this
+                sync, -1 padded (U is the pow2 stream width ≤ the budget)
+    n_union:    () int32 — TRUE union size this sync (shipped + deferred ==
+                unique Gaussians wanted, including carried-over debt)
+    n_shipped:  () int32 — rows actually in this sync's stream (≤ n_union;
+                equal unless the union overflowed the budget)
     payload:    EncodedGaussians with U rows — the codec ran ONCE, on the
-                union; rows past n_union are padding (never referenced)
-    ref_mask:   (B, U) bool — client b's Δcut = union rows where ref_mask[b]
-    overflow:   () bool — union exceeded the budget (payload truncated)
+                shipped rows; rows past n_shipped are padding
+    ref_mask:   (B, U) bool — stream rows client b INGESTS this sync (its
+                wanted rows among the shipped set, clipped to its per-client
+                row allowance), aligned with union_gids
+    delivered:  (B, N) bool — node-indexed view of ref_mask (what lands in
+                client b's store this sync; drives the wire accounting)
+    deferred:   (B, N) bool — rows client b wanted that did NOT ship to it
+                this sync (union overflow or allowance) — the carry-over the
+                service folds into the next sync's union
+    client_overflow: (B,) bool — client b has ≥1 deferred row this sync
+    client_pages: (B,) int32 — priority pages client b pulled rows from
+                (page-header framing charge)
+    pages:      () int32 — priority pages in this sync's shared stream
+                (⌈n_shipped/page_size⌉)
+    overflow:   () bool — some row was deferred somewhere in the fleet (the
+                old truncation flag, now recoverable instead of a silent
+                loss)
     """
 
     union_gids: jax.Array
     n_union: jax.Array
+    n_shipped: jax.Array
     payload: comp.EncodedGaussians
     ref_mask: jax.Array
+    delivered: jax.Array
+    deferred: jax.Array
+    client_overflow: jax.Array
+    client_pages: jax.Array
+    pages: jax.Array
     overflow: jax.Array
 
     @property
@@ -80,29 +117,89 @@ def _union_mask(delta_masks: jax.Array):
     return union, union.sum().astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "mesh"))
-def _union_refs(delta_masks: jax.Array, union: jax.Array, width: int,
-                mesh=None):
-    (gids,) = jnp.nonzero(union, size=width, fill_value=-1)
-    gids = gids.astype(jnp.int32)
-    ref = delta_masks[:, jnp.clip(gids, 0)] & (gids >= 0)[None, :]
+_PRIO_PAD = jnp.int32(2**31 - 1)  # non-members sort after every real row
+
+
+@functools.partial(jax.jit, static_argnames=("width", "page_size", "mesh"))
+def _union_refs(wanted: jax.Array, union: jax.Array, priority: jax.Array,
+                allowance: jax.Array, width: int, page_size: int, mesh=None):
+    """Priority-ordered page selection of one sync's union.
+
+    Ranks every union row by (tree depth asc, requester count desc, gid asc)
+    — coarse LoD ships first, ties broken toward the most-shared rows — and
+    ships the top `width` ranks. The stream itself stays ASCENDING by gid
+    (delta-coded ids; each page is internally ascending), so the shipped
+    subset decodes exactly like the unpaged format. `allowance` (B,) caps
+    the rows each client ingests this sync, counted in priority order, so a
+    bandwidth-tiered client takes the coarsest pages first and defers the
+    rest. Returns everything the batch needs: the wire-order gids/refs, the
+    node-indexed delivered/deferred masks, and the page accounting."""
+    b, n = wanted.shape
+    gid = jnp.arange(n, dtype=jnp.int32)
+    req = wanted.sum(axis=0).astype(jnp.int32)
+    k1 = jnp.where(union, priority.astype(jnp.int32), _PRIO_PAD)
+    k1s, _, by_rank = jax.lax.sort((k1, -req, gid), num_keys=3)
+    take = by_rank[:width]                       # gids, priority order
+    valid = k1s[:width] != _PRIO_PAD             # rank is a real union row
+    n_shipped = valid.sum().astype(jnp.int32)
+
+    # per-client ingest: its wanted rows among the shipped ranks, first
+    # `allowance` of them in priority order
+    ref_rank = wanted[:, take] & valid[None, :]              # (B, width)
+    cum = jnp.cumsum(ref_rank.astype(jnp.int32), axis=1)
+    ingest = ref_rank & (cum <= allowance[:, None])
+
+    # page accounting: rank r lives in page r // page_size
+    n_pages = max(1, -(-width // page_size))
+    page_of = jnp.arange(width, dtype=jnp.int32) // page_size
+    pages_hit = jnp.zeros((b, n_pages), bool).at[:, page_of].max(ingest)
+    client_pages = pages_hit.sum(axis=1).astype(jnp.int32)
+    pages = ((n_shipped + page_size - 1) // page_size).astype(jnp.int32)
+
+    # node-indexed views: what landed, what is owed
+    delivered = jnp.zeros((b, n), bool).at[:, take].max(ingest)
+    deferred = wanted & ~delivered
+    client_overflow = deferred.any(axis=1)
+
+    # wire order: shipped gids ascending (invalid ranks sort last, pad -1)
+    order = jnp.argsort(jnp.where(valid, take, jnp.int32(n)))
+    gids = jnp.where(valid[order], take[order], -1).astype(jnp.int32)
+    ref = ingest[:, order]
     if mesh is not None:
         from repro.sharding.fleet import constrain_fleet
         # the union row axis shards over `slabs` (codec work parallelism);
-        # ref_mask rows stay with their client shard
+        # per-client leaves stay with their client shard
         gids = constrain_fleet(gids, ("union",), mesh)
         ref = constrain_fleet(ref, ("clients", "union"), mesh)
-    return gids, ref
+        delivered = constrain_fleet(delivered, ("clients", None), mesh)
+        deferred = constrain_fleet(deferred, ("clients", None), mesh)
+        client_overflow = constrain_fleet(client_overflow, ("clients",), mesh)
+        client_pages = constrain_fleet(client_pages, ("clients",), mesh)
+    return (gids, ref, delivered, deferred, client_overflow, client_pages,
+            pages, n_shipped)
 
 
 def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
                       delta_masks: jax.Array, budget: int,
-                      active=None, mesh=None) -> DeltaBatch:
-    """Encode one sync's fleet Δcut once.
+                      active=None, mesh=None, *, pending=None, priority=None,
+                      allowance=None, page_size=None) -> DeltaBatch:
+    """Encode one sync's fleet Δcut once, paged under the budget.
 
     delta_masks: (B, N) bool — the batched `SyncPlan.delta_data`.
-    budget: static cap on the encoded stream (rows). Correctness requires
-    budget >= the true union size; `overflow` flags truncation.
+    budget: static cap on the encoded stream (rows). A union larger than the
+    budget is NOT truncated: the coarsest `budget` priority ranks ship now
+    and the rest comes back in `deferred` for the caller to fold into the
+    next sync (`overflow` flags that some row was deferred).
+    pending: optional (B, N) bool carry-over debt from earlier syncs
+    (rows deferred then) — unioned into this sync's wanted set, so a
+    deferred Gaussian keeps competing for stream slots until it ships.
+    priority: optional (N,) int32 rank key, lower ships first (the service
+    passes `LodTree.node_levels()` — coarse LoD first); default 0 everywhere
+    (requester count / gid order only).
+    allowance: optional (B,) int32 per-client row cap for this sync (the
+    closed-loop bitrate controller's knob); default unlimited.
+    page_size: rows per priority page (accounting granularity for the
+    per-page wire header); default one page spanning the whole stream.
     active: optional (B,) bool slot mask (ragged fleets, repro.serve.fleet)
     — an inactive slot contributes NO rows to the union (its `ref_mask` row
     stays all-False and no Gaussian is encoded on its behalf), so the
@@ -125,18 +222,32 @@ def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
     tests/test_sharding_fleet.py)."""
     if active is not None:
         delta_masks = delta_masks & active[:, None]
-    union, n_union = _union_mask(delta_masks)
+        if pending is not None:
+            pending = pending & active[:, None]
+    wanted = delta_masks if pending is None else delta_masks | pending
+    union, n_union = _union_mask(wanted)
     n = int(jax.device_get(n_union))
     width = ls.pow2_bucket(n, budget)
-    gids, ref = _union_refs(delta_masks, union, width, mesh=mesh)
+    b = wanted.shape[0]
+    if priority is None:
+        priority = jnp.zeros((wanted.shape[1],), jnp.int32)
+    allow = (jnp.full((b,), width, jnp.int32) if allowance is None
+             else jnp.asarray(allowance, jnp.int32))
+    psize = width if page_size is None else max(1, min(int(page_size), width))
+    (gids, ref, delivered, deferred, client_overflow, client_pages, pages,
+     n_shipped) = _union_refs(wanted, union, priority, allow, width=width,
+                              page_size=psize, mesh=mesh)
     payload = comp.encode_rows(codec, gaussians, gids)
     if mesh is not None:
         from repro.sharding.fleet import constrain_fleet
         payload = jax.tree_util.tree_map(
             lambda a: constrain_fleet(
                 a, ("union",) + (None,) * (a.ndim - 1), mesh), payload)
-    return DeltaBatch(union_gids=gids, n_union=n_union, payload=payload,
-                      ref_mask=ref, overflow=n_union > jnp.int32(width))
+    return DeltaBatch(union_gids=gids, n_union=n_union, n_shipped=n_shipped,
+                      payload=payload, ref_mask=ref, delivered=delivered,
+                      deferred=deferred, client_overflow=client_overflow,
+                      client_pages=client_pages, pages=pages,
+                      overflow=client_overflow.any())
 
 
 def decode_client(codec: comp.Codec, batch: DeltaBatch, sh_k: int,
@@ -157,13 +268,19 @@ def encode_per_client(gaussians: Gaussians, codec: comp.Codec,
                       delta_masks: jax.Array, budget: int):
     """Reference path: encode every client's Δcut independently (B codec
     calls). Returns per-client (ids (budget,) int32 -1 padded ascending,
-    EncodedGaussians). Exists as the baseline the dedup path is proven
-    against — and as the measuring stick for `dedup_bytes_saved`."""
+    EncodedGaussians, overflow () bool). `overflow` is true when the
+    client's Δ exceeded the budget and its unicast stream was TRUNCATED —
+    parity fixtures must assert it false, otherwise dedup-vs-baseline
+    comparisons can pass with both paths silently wrong (the bug this flag
+    closes). Exists as the baseline the dedup path is proven against — and
+    as the measuring stick for `dedup_bytes_saved`."""
     out = []
     for b in range(delta_masks.shape[0]):
+        count = delta_masks[b].sum().astype(jnp.int32)
         (ids,) = jnp.nonzero(delta_masks[b], size=budget, fill_value=-1)
         ids = ids.astype(jnp.int32)
-        out.append((ids, comp.encode_rows(codec, gaussians, ids)))
+        out.append((ids, comp.encode_rows(codec, gaussians, ids),
+                    count > jnp.int32(budget)))
     return out
 
 

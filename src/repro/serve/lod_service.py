@@ -115,6 +115,13 @@ class ServiceState:
     temporal: ls.TemporalState  # leaves (C, Ns, ...)
     cut_gids: jax.Array         # (C, cut_budget) int32, -1 padded
     sync_index: jax.Array       # (C,) int32 — per-slot syncs WHILE ACTIVE
+    pending: jax.Array          # (C, N) bool — Δ rows owed to the slot from
+    #                             earlier paged syncs (deferred by the
+    #                             stream budget / row allowance); folded
+    #                             into the next sync's union as forced-stale
+    #                             membership until they ship. All-False for
+    #                             inactive slots (an evicted slot drops its
+    #                             debt; an admitted slot starts clean).
     fleet: flt.FleetState       # slot occupancy / client ids / generations
 
     @property
@@ -150,9 +157,19 @@ class ServiceStats:
     resweeps: jax.Array        # int32 — stale subtrees swept
     client_resident: jax.Array  # int32 — client store occupancy after sync
     overflow: jax.Array        # bool — cut exceeded cut_budget (queue truncated)
-    delta_overflow: jax.Array  # bool — fleet Δ-union exceeded delta_budget
-    #                            (encode-once payload truncated; always False
+    delta_overflow: jax.Array  # bool — PER CLIENT: ≥1 of this client's Δ
+    #                            rows was deferred to a later page this sync
+    #                            (stream budget or row allowance; the rows
+    #                            are carried over, never lost — always False
     #                            with dedup off or the default budget)
+    delta_shipped: jax.Array   # int32 — union rows the client actually
+    #                            ingested this sync (== delta_size unless
+    #                            rows were deferred, by this sync or earlier)
+    delta_deferred: jax.Array  # int32 — rows owed to the client AFTER this
+    #                            sync (its carry-over into the next union;
+    #                            0 once the paged stream has converged)
+    pages: jax.Array           # int32 — priority pages the client pulled
+    #                            rows from this sync (page-header framing)
 
 
 def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int,
@@ -172,6 +189,7 @@ def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int,
         temporal=ls.TemporalState.initial_batched(m.Ns, m.S, cap),
         cut_gids=jnp.full((cap, cfg.cut_budget), -1, jnp.int32),
         sync_index=jnp.zeros((cap,), jnp.int32),
+        pending=jnp.zeros((cap, tree.n_pad), bool),
         fleet=flt.fleet_init(cap, n_clients),
     )
 
@@ -183,20 +201,23 @@ def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int,
 
 def _fresh_slot_leaves(state: ServiceState):
     """(fresh ManagerState, fresh TemporalState, fresh cut row, fresh sync
-    counter) for one slot — shapes from the traced state, so usable in jit."""
+    counter, fresh pending row) for one slot — shapes from the traced
+    state, so usable in jit."""
     n = state.mgr.client_has.shape[1]
     ns, s = state.temporal.slab_cut0.shape[1:]
     return (mgr.ManagerState.initial(n), ls.TemporalState.initial(ns, s),
-            jnp.full((state.cut_gids.shape[1],), -1, jnp.int32), jnp.int32(0))
+            jnp.full((state.cut_gids.shape[1],), -1, jnp.int32), jnp.int32(0),
+            jnp.zeros((n,), bool))
 
 
 def _reset_slot(state: ServiceState, slot) -> ServiceState:
-    f_mgr, f_tmp, f_cut, f_idx = _fresh_slot_leaves(state)
+    f_mgr, f_tmp, f_cut, f_idx, f_pend = _fresh_slot_leaves(state)
     return ServiceState(
         mgr=flt.reset_slot(state.mgr, f_mgr, slot),
         temporal=flt.reset_slot(state.temporal, f_tmp, slot),
         cut_gids=state.cut_gids.at[jnp.asarray(slot, jnp.int32)].set(f_cut),
         sync_index=state.sync_index.at[jnp.asarray(slot, jnp.int32)].set(f_idx),
+        pending=state.pending.at[jnp.asarray(slot, jnp.int32)].set(f_pend),
         fleet=state.fleet,
     )
 
@@ -229,12 +250,13 @@ def service_grow(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     Host-side: growth (and its dual, `service_shrink`) are the lifecycle
     events that change compiled shapes, so each jitted sync path retraces
     exactly once afterwards."""
-    f_mgr, f_tmp, f_cut, f_idx = _fresh_slot_leaves(state)
+    f_mgr, f_tmp, f_cut, f_idx, f_pend = _fresh_slot_leaves(state)
     return ServiceState(
         mgr=flt.pad_slots(state.mgr, f_mgr, new_capacity),
         temporal=flt.pad_slots(state.temporal, f_tmp, new_capacity),
         cut_gids=flt.pad_slots(state.cut_gids, f_cut, new_capacity),
         sync_index=flt.pad_slots(state.sync_index, f_idx, new_capacity),
+        pending=flt.pad_slots(state.pending, f_pend, new_capacity),
         fleet=flt.fleet_grow(state.fleet, new_capacity),
     )
 
@@ -256,6 +278,7 @@ def service_shrink(state: ServiceState, perm) -> ServiceState:
         temporal=flt.take_slots(state.temporal, perm),
         cut_gids=flt.take_slots(state.cut_gids, perm),
         sync_index=flt.take_slots(state.sync_index, perm),
+        pending=flt.take_slots(state.pending, perm),
         fleet=flt.fleet_shrink(state.fleet, perm),
     )
 
@@ -276,6 +299,8 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
                  nodes_touched: jax.Array, resweeps: jax.Array,
                  bytes_per_g: float, codec: Optional[comp.Codec] = None,
                  dedup: bool = False, delta_budget: Optional[int] = None,
+                 priority=None, allowance=None,
+                 page_size: Optional[int] = None,
                  mesh=None) -> Tuple[ServiceState, ServiceStats,
                                      Optional[dp.DeltaBatch]]:
     """Shared tail of both sync paths: batched management-table update,
@@ -283,9 +308,21 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
 
     With `dedup`, the wire format is the shared multicast stream of
     repro.serve.delta_path (one codec call on the fleet union; `sync_bytes`
-    uses the shared-payload split) and the built `DeltaBatch` is returned;
-    otherwise the legacy per-client unicast accounting applies and the third
-    element is None.
+    uses the shared-payload split, charging only the rows that actually
+    shipped plus the page-header framing) and the built `DeltaBatch` is
+    returned; otherwise the legacy per-client unicast accounting applies and
+    the third element is None.
+
+    The union folds in `state.pending` — rows deferred by earlier paged
+    syncs — and the new state's `pending` is this sync's deferred set MINUS
+    rows the shared reuse rule evicted meanwhile (`plan.evicted`): a row the
+    unbudgeted oracle's client would have dropped by now is debt nobody
+    should pay, so dropping it keeps the paged stream bitwise convergent to
+    the oracle. `priority` is the (N,) coarse-first rank key (default: the
+    tree's `node_levels()`, computed here when not supplied — long-lived
+    services pass their cached copy); `allowance` the optional (B,) int32
+    per-client row cap (the bitrate controller's knob); `page_size` the
+    priority-page granularity (default: one page per stream).
 
     Ragged fleets: inactive slots (per `state.fleet.active`) are masked out
     of EVERYTHING here — cut masks (⇒ no Δ rows, no cut ids, fresh -1 cut
@@ -306,25 +343,43 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     gids, counts = _batched_cut_gids(masks, cfg.cut_budget, mesh=mesh)
     unicast = mgr.batched_wire_bytes(plan, bytes_per_g, active=active)
     batch = None
+    zero = jnp.int32(0)
+    zeros_i = jnp.zeros(counts.shape, jnp.int32)
     if dedup:
         if codec is None or delta_budget is None:
             raise ValueError("dedup sync needs a codec and a delta_budget")
+        if priority is None:
+            priority = tree.node_levels()
         batch = dp.build_delta_batch(tree.gaussians, codec, plan.delta_data,
-                                     delta_budget, active=active, mesh=mesh)
+                                     delta_budget, active=active, mesh=mesh,
+                                     pending=state.pending, priority=priority,
+                                     allowance=allowance, page_size=page_size)
         sync_bytes = mgr.batched_wire_bytes(plan, bytes_per_g,
                                             shared_payload=True,
-                                            active=active)
+                                            active=active,
+                                            delivered=batch.delivered,
+                                            client_pages=batch.client_pages)
         saved = unicast - sync_bytes
-        delta_overflow = jnp.broadcast_to(batch.overflow, counts.shape)
+        delta_overflow = batch.client_overflow
+        delta_shipped = batch.delivered.sum(axis=1).astype(jnp.int32)
+        # carry-over debt: deferred rows survive until they ship — unless
+        # the shared reuse rule evicted them meanwhile (the oracle's client
+        # would have dropped them too)
+        pending = batch.deferred & ~plan.evicted & active[:, None]
+        delta_deferred = pending.sum(axis=1).astype(jnp.int32)
+        pages = batch.client_pages
     else:
         sync_bytes = unicast
         saved = jnp.zeros_like(unicast)
         delta_overflow = jnp.zeros(counts.shape, bool)
+        delta_shipped = jnp.where(active, plan.n_delta, zero)
+        delta_deferred = zeros_i
+        pages = zeros_i
+        pending = state.pending
     new_state = ServiceState(
         mgr=new_mgr, temporal=temporal, cut_gids=gids,
         sync_index=state.sync_index + active.astype(jnp.int32),
-        fleet=state.fleet)
-    zero = jnp.int32(0)
+        pending=pending, fleet=state.fleet)
     stats = ServiceStats(
         cut_size=counts,
         delta_size=plan.n_delta,
@@ -335,13 +390,92 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
         resweeps=jnp.where(active, resweeps.astype(jnp.int32), zero),
         client_resident=plan.n_resident,
         overflow=counts > cfg.cut_budget,
-        delta_overflow=delta_overflow & active)
+        delta_overflow=delta_overflow & active,
+        delta_shipped=delta_shipped,
+        delta_deferred=delta_deferred,
+        pages=jnp.where(active, pages, zero))
     # pin the declared fleet layout on the outputs (no-op when meshless):
     # every ServiceState/ServiceStats leaf leads with the slot axis and
     # carries the client-shard NamedSharding the acceptance contract names
     new_state = shd.shard_service_state(mesh, new_state)
     stats = shd.shard_service_state(mesh, stats)
     return new_state, stats, batch
+
+
+# ---------------------------------------------------------------------------
+# closed-loop per-client bitrate control (heterogeneous bandwidth tiers)
+# ---------------------------------------------------------------------------
+
+
+BANDWIDTH_TIERS = {
+    # per-SYNC downlink budgets (bytes) for heterogeneous clients — the
+    # Voyager-style device classes: a phone on cellular, a standalone
+    # headset on home Wi-Fi, a tethered headset on a link that is
+    # effectively never the bottleneck
+    "phone": 2.5e5,
+    "headset": 1.5e6,
+    "tethered": 1.6e7,
+}
+
+
+def rate_control_step(target_bytes, measured_bytes, allowance, tau_scale, *,
+                      page_size: int, max_rows: int,
+                      tau_step: float = 1.25, tau_scale_max: float = 8.0):
+    """One update of the per-client closed-loop bitrate controller.
+
+    Pure host-side numpy (it runs between syncs, on the previous sync's
+    MEASURED per-client wire bytes — a one-sync-delayed feedback loop, the
+    price of never forcing the in-flight sync). Two nested knobs per client:
+
+      * `allowance` — rows the client may ingest per sync (its page
+        allowance in the priority-ordered union stream). Multiplicative
+        feedback: scaled by target/measured, clipped to [x0.5, x2.0] per
+        sync so one noisy measurement cannot slam the loop, floored at one
+        page (`page_size` — a client always makes progress) and capped at
+        `max_rows` (the stream budget).
+      * `tau_scale` — the fallback when the allowance alone cannot meet the
+        target: a client pinned at the one-page floor and still over budget
+        has its foveation threshold scaled up by `tau_step` per sync (coarser
+        cut ⇒ fewer Δ rows at the source), up to `tau_scale_max`; once
+        comfortably under target (measured < target/tau_step) the scale
+        decays back toward 1.0 — the closed loop breathes both ways.
+
+    Clients with a non-finite target (or a negative `allowance` sentinel)
+    are uncontrolled and pass through untouched. Returns (allowance,
+    tau_scale) as new arrays."""
+    target = np.asarray(target_bytes, np.float64)
+    measured = np.asarray(measured_bytes, np.float64)
+    allowance = np.asarray(allowance, np.int64)
+    tau_scale = np.asarray(tau_scale, np.float32)
+    controlled = np.isfinite(target) & (allowance >= 0)
+    ratio = np.where(controlled & (measured > 0.0),
+                     target / np.maximum(measured, 1.0), 1.0)
+    step = np.clip(ratio, 0.5, 2.0)
+    new_allow = np.where(
+        controlled,
+        np.clip(np.floor(allowance * step), page_size, max_rows),
+        allowance).astype(np.int64)
+    at_floor = controlled & (new_allow <= page_size) & (ratio < 1.0)
+    new_tau = np.where(at_floor,
+                       np.minimum(tau_scale * tau_step, tau_scale_max),
+                       tau_scale)
+    relaxed = controlled & ~at_floor & (ratio > tau_step) & (tau_scale > 1.0)
+    new_tau = np.where(relaxed, np.maximum(new_tau / tau_step, 1.0), new_tau)
+    return new_allow, new_tau.astype(np.float32)
+
+
+def _bandwidth_bytes(bw) -> float:
+    """One client's per-sync byte target: a `BANDWIDTH_TIERS` name, a
+    number (bytes/sync), or None/inf for uncontrolled."""
+    if bw is None:
+        return float("inf")
+    if isinstance(bw, str):
+        try:
+            return float(BANDWIDTH_TIERS[bw])
+        except KeyError:
+            raise ValueError(f"unknown bandwidth tier {bw!r} (have "
+                             f"{sorted(BANDWIDTH_TIERS)})") from None
+    return float(bw)
 
 
 def _fleet_taus(cfg: SessionConfig, n_clients: int, taus) -> jnp.ndarray:
@@ -361,6 +495,8 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
                          codec: Optional[comp.Codec] = None,
                          dedup: bool = False,
                          delta_budget: Optional[int] = None,
+                         priority=None, allowance=None,
+                         page_size: Optional[int] = None,
                          mesh=None) -> Tuple[ServiceState, ServiceStats,
                                              Optional[dp.DeltaBatch]]:
     """One LoD sync for every client, fully on-device (vmapped search).
@@ -391,7 +527,8 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     return _finish_sync(tree, cfg, state, temporal, masks,
                         cut.nodes_touched, cut.resweep.sum(axis=1),
                         bytes_per_g, codec=codec, dedup=dedup,
-                        delta_budget=delta_budget, mesh=mesh)
+                        delta_budget=delta_budget, priority=priority,
+                        allowance=allowance, page_size=page_size, mesh=mesh)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
@@ -517,6 +654,8 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         codec: Optional[comp.Codec] = None,
                         dedup: bool = False,
                         delta_budget: Optional[int] = None,
+                        priority=None, allowance=None,
+                        page_size: Optional[int] = None,
                         tables: Optional[ls.SlabTables] = None,
                         sweep_impl: str = "xla", interpret: bool = True,
                         mesh=None) -> Tuple[ServiceState, ServiceStats,
@@ -615,7 +754,9 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks, nodes_touched,
                         stale.sum(axis=1), bytes_per_g, codec=codec,
-                        dedup=dedup, delta_budget=delta_budget, mesh=mesh)
+                        dedup=dedup, delta_budget=delta_budget,
+                        priority=priority, allowance=allowance,
+                        page_size=page_size, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -696,6 +837,20 @@ class LodService:
     never-churned service ids coincide with 0..B-1, so the legacy positional
     API keeps working unchanged.
 
+    The Δ stream is PAGED (repro.serve.delta_path): a sync whose fleet
+    Δ-union exceeds `delta_budget` ships the coarsest `page_size`-row
+    priority pages now and carries the rest as per-slot debt
+    (`ServiceState.pending`) — every Gaussian arrives within ⌈U/width⌉
+    syncs, nothing is silently lost. `bandwidth` turns on the closed-loop
+    per-client bitrate controller: pass a `BANDWIDTH_TIERS` name ("phone" /
+    "headset" / "tethered"), a bytes-per-sync number, or a per-client
+    sequence of either; each sync, the PREVIOUS sync's measured per-client
+    `sync_bytes` multiplicatively adjusts that client's row allowance
+    (floored at one page, so it always makes progress) and — when the floor
+    alone still overshoots — its foveation τ (`rate_control_step`).
+    `admit(bandwidth=...)` assigns a tier at admission; an evicted slot
+    drops its deferred pages and its controller state.
+
     `mesh` installs the clients×slabs serving mesh (see the module
     docstring; `launch.make_fleet_mesh`) — sync, lifecycle, and fallback
     render all run sharded, bitwise-identical to the meshless service."""
@@ -707,7 +862,8 @@ class LodService:
                  delta_budget: Optional[int] = None,
                  capacity: Optional[int] = None,
                  mesh=None, max_clients: Optional[int] = None,
-                 max_state_bytes: Optional[float] = None):
+                 max_state_bytes: Optional[float] = None,
+                 bandwidth=None, page_size: int = 256):
         if mode not in ("pooled", "vmapped"):
             raise ValueError(f"unknown scheduler mode: {mode!r}")
         if sweep_impl not in ("xla", "pallas"):
@@ -763,6 +919,28 @@ class LodService:
         self.delta_budget = (int(delta_budget) if delta_budget is not None
                              else min(tree.n_pad,
                                       cfg.cut_budget * self.capacity))
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = int(page_size)
+        # coarse-first priority key of the paged union stream, derived once
+        self._priority = tree.node_levels()
+        # closed-loop bitrate controller state (host-side, like `taus`):
+        # per-slot byte target (inf = uncontrolled), row allowance
+        # (-1 sentinel = uncontrolled) and foveation fallback scale
+        self._bw_target = np.full(self.capacity, np.inf, np.float64)
+        self._allowance = np.full(self.capacity, -1, np.int64)
+        self._tau_scale = np.ones(self.capacity, np.float32)
+        self._last_stats: Optional[ServiceStats] = None
+        if bandwidth is not None:
+            if isinstance(bandwidth, (list, tuple, np.ndarray)):
+                if len(bandwidth) != n_clients:
+                    raise ValueError(f"expected {n_clients} bandwidth "
+                                     f"entries, got {len(bandwidth)}")
+                targets = [_bandwidth_bytes(bw) for bw in bandwidth]
+            else:
+                targets = [_bandwidth_bytes(bandwidth)] * n_clients
+            for slot, target in enumerate(targets):
+                self._set_bandwidth_slot(slot, target)
         # device-resident slab tables: gathered once, reused by every pooled
         # sweep (the per-sync program starts at the pair gather); the
         # vmapped reference path never reads them, so don't hold the copy.
@@ -799,9 +977,31 @@ class LodService:
 
     def client_tau(self, client_id: int) -> float:
         """One live client's foveated LoD threshold (cfg.tau unless set at
-        construction or admission)."""
+        construction or admission; the bitrate controller's `tau_scale`
+        multiplies on top of this base during sync)."""
         slot = self._slot_of(client_id)
         return float(self.cfg.tau if self.taus is None else self.taus[slot])
+
+    def _set_bandwidth_slot(self, slot: int, target: float) -> None:
+        """Seed one slot's controller state: its byte target and an initial
+        row allowance of target/bytes-per-row (the loop refines it from
+        measurements; uncontrolled slots carry the -1 sentinel)."""
+        self._bw_target[slot] = target
+        self._tau_scale[slot] = 1.0
+        if np.isfinite(target):
+            rows = int(target // max(self.bytes_per_g, 1.0))
+            self._allowance[slot] = int(np.clip(rows, self.page_size,
+                                                self.delta_budget))
+        else:
+            self._allowance[slot] = -1
+
+    def client_bandwidth(self, client_id: int):
+        """One live client's (target_bytes, row_allowance, tau_scale)
+        controller triple (target inf / allowance None when uncontrolled)."""
+        slot = self._slot_of(client_id)
+        allow = int(self._allowance[slot])
+        return (float(self._bw_target[slot]),
+                None if allow < 0 else allow, float(self._tau_scale[slot]))
 
     def _slot_state_bytes(self) -> float:
         """Per-slot device bytes of the service state (all slot-axis leaves
@@ -831,7 +1031,7 @@ class LodService:
         return None
 
     def admit(self, cam=None, tau: Optional[float] = None,
-              required: bool = True) -> Optional[int]:
+              required: bool = True, bandwidth=None) -> Optional[int]:
         """Admit one client; returns its stable id. The new slot starts
         fully stale, so the client's first sync is a cold full sweep and a
         cold Δcut. Within the current capacity bucket this is a jitted slot
@@ -844,7 +1044,11 @@ class LodService:
         configured, an admit past the budget is DENIED instead of growing
         unboundedly — raising `AdmissionDenied` (`required=True`, the
         default) or returning None (`required=False`, for callers that
-        queue and retry). A denied admit leaves the service untouched."""
+        queue and retry). A denied admit leaves the service untouched.
+
+        `bandwidth` assigns the client's downlink tier (a `BANDWIDTH_TIERS`
+        name or bytes/sync; default uncontrolled) — its closed-loop bitrate
+        controller starts clean, like its pending-page debt."""
         denial = self._admission_denial()
         if denial is not None:
             if required:
@@ -869,6 +1073,7 @@ class LodService:
             self.taus = np.full(self.capacity, self.cfg.tau, np.float32)
         if self.taus is not None:
             self.taus[slot] = float(self.cfg.tau if tau is None else tau)
+        self._set_bandwidth_slot(slot, _bandwidth_bytes(bandwidth))
         return client_id
 
     def evict(self, client_id: int) -> None:
@@ -885,6 +1090,11 @@ class LodService:
         self._slot_cams[slot] = 0.0
         if self.taus is not None:
             self.taus[slot] = self.cfg.tau
+        # the slot's deferred pages died with its ServiceState.pending row
+        # (service_evict_slot resets it); drop the controller state too
+        self._bw_target[slot] = np.inf
+        self._allowance[slot] = -1
+        self._tau_scale[slot] = 1.0
 
     def _grow(self, new_capacity: int) -> None:
         """Pad every slot-axis array to `new_capacity` (host mirrors
@@ -908,6 +1118,12 @@ class LodService:
         # shrink remap and client_delta both handle the short payload
         self._delta_ids = np.concatenate(
             [self._delta_ids, np.full(pad, -1, np.int64)])
+        self._bw_target = np.concatenate(
+            [self._bw_target, np.full(pad, np.inf, np.float64)])
+        self._allowance = np.concatenate(
+            [self._allowance, np.full(pad, -1, np.int64)])
+        self._tau_scale = np.concatenate(
+            [self._tau_scale, np.ones(pad, np.float32)])
         self.capacity = new_capacity
         if self._delta_budget_arg is None:
             self.delta_budget = min(self.tree.n_pad,
@@ -946,17 +1162,27 @@ class LodService:
             self.delta_budget = min(self.tree.n_pad,
                                     self.cfg.cut_budget * self.capacity)
         if self.last_delta is not None:
-            # the payload may predate a capacity growth (ref_mask rows =
-            # the capacity at its sync): slots beyond it have no slice —
-            # give them an all-False row (their _delta_ids entry is -1, so
-            # client_delta already refuses them)
-            ref = self.last_delta.ref_mask
-            safe = np.minimum(perm, ref.shape[0] - 1)
-            remapped = jnp.where((perm < ref.shape[0])[:, None], ref[safe],
-                                 False)
-            self.last_delta = dataclasses.replace(self.last_delta,
-                                                  ref_mask=remapped)
+            # the payload may predate a capacity growth (its per-client rows
+            # = the capacity at its sync): slots beyond it have no slice —
+            # give them an all-zero row (their _delta_ids entry is -1, so
+            # client_delta already refuses them). Every client-leading leaf
+            # of the batch remaps through the same permutation.
+            def _remap_rows(a):
+                safe = np.minimum(perm, a.shape[0] - 1)
+                keep = (perm < a.shape[0]).reshape((-1,) + (1,) *
+                                                  (a.ndim - 1))
+                return jnp.where(keep, a[safe], jnp.zeros((), a.dtype))
+            self.last_delta = dataclasses.replace(
+                self.last_delta,
+                ref_mask=_remap_rows(self.last_delta.ref_mask),
+                delivered=_remap_rows(self.last_delta.delivered),
+                deferred=_remap_rows(self.last_delta.deferred),
+                client_overflow=_remap_rows(self.last_delta.client_overflow),
+                client_pages=_remap_rows(self.last_delta.client_pages))
         self._delta_ids = self._delta_ids[perm]
+        self._bw_target = self._bw_target[perm]
+        self._allowance = self._allowance[perm]
+        self._tau_scale = self._tau_scale[perm]
         self._rcfg_cache.clear()
         self._stack_cache.clear()
         return target
@@ -973,7 +1199,12 @@ class LodService:
         `cam_positions` is either an (n_clients, 3) array addressing the
         live clients in slot order (`active_ids` order — the legacy form), a
         {client_id: position} dict updating a subset (others keep their last
-        known position), or None (everyone keeps their last position)."""
+        known position), or None (everyone keeps their last position).
+
+        With bandwidth-controlled clients the PREVIOUS sync's stats are
+        read back here to close the bitrate loop (one forced await per sync
+        — only then; an uncontrolled fleet keeps the fully-async
+        pipeline)."""
         if isinstance(cam_positions, dict):
             for cid, pos in cam_positions.items():
                 self._slot_cams[self._slot_of(cid)] = np.asarray(
@@ -984,8 +1215,24 @@ class LodService:
                 raise ValueError(f"expected ({self.n_clients}, 3) camera "
                                  f"positions, got {cams.shape}")
             self._slot_cams[self._active] = cams
-        kw = dict(taus=self.taus, codec=self.codec, dedup=self.dedup,
-                  delta_budget=self.delta_budget, mesh=self.mesh)
+        allowance, taus_eff = None, self.taus
+        if self.dedup and np.isfinite(self._bw_target).any():
+            if self._last_stats is not None:
+                measured = np.asarray(self._last_stats.sync_bytes,
+                                      np.float64)
+                self._allowance, self._tau_scale = rate_control_step(
+                    self._bw_target, measured, self._allowance,
+                    self._tau_scale, page_size=self.page_size,
+                    max_rows=self.delta_budget)
+            allowance = np.where(self._allowance >= 0, self._allowance,
+                                 self.delta_budget).astype(np.int32)
+            base = (self.taus if self.taus is not None
+                    else np.full(self.capacity, self.cfg.tau, np.float32))
+            taus_eff = (base * self._tau_scale).astype(np.float32)
+        kw = dict(taus=taus_eff, codec=self.codec, dedup=self.dedup,
+                  delta_budget=self.delta_budget, priority=self._priority,
+                  allowance=allowance, page_size=self.page_size,
+                  mesh=self.mesh)
         if self.mode == "pooled":
             self.state, stats, batch = service_sync_pooled(
                 self.tree, self.cfg, self.state, self._slot_cams, self.focal,
@@ -1000,6 +1247,9 @@ class LodService:
             # tenancy snapshot: which client each slot's ref_mask row is FOR
             # (guards client_delta against churn between sync and decode)
             self._delta_ids = self._client_ids.copy()
+        # feedback source for the NEXT sync's rate-control step (device-
+        # resident; only read back when a client is bandwidth-controlled)
+        self._last_stats = stats
         return stats
 
     def client_cut(self, client_id: int) -> jax.Array:

@@ -55,6 +55,8 @@ def test_dedup_decode_bitwise_matches_per_client(small_tree, overlap):
                                  jnp.asarray(masks), budget)
     assert not bool(batch.overflow)
     assert int(batch.n_union) == int(masks.any(axis=0).sum())
+    assert int(batch.n_shipped) == int(batch.n_union)  # ample: no paging
+    assert not np.asarray(batch.deferred).any()
     ref = dp.encode_per_client(small_tree.gaussians, codec,
                                jnp.asarray(masks), budget)
 
@@ -62,7 +64,10 @@ def test_dedup_decode_bitwise_matches_per_client(small_tree, overlap):
         ids_u, dec_u = dp.decode_client(codec, batch, sh_k, i)
         ids_u = np.asarray(ids_u)
         sel_u = ids_u >= 0
-        ids_r, enc_r = ref[i]
+        ids_r, enc_r, ovf_r = ref[i]
+        # a truncated reference stream would make the parity below
+        # meaningless — the budget must have been ample for BOTH paths
+        assert not bool(ovf_r), f"client {i} reference stream truncated"
         ids_r = np.asarray(ids_r)
         sel_r = ids_r >= 0
         # same rows, same ascending-gid order
@@ -107,6 +112,40 @@ def test_union_overflow_flagged(small_tree):
     batch = dp.build_delta_batch(small_tree.gaussians, codec,
                                  jnp.asarray(masks), 64)
     assert bool(batch.overflow)
+    # ... but nothing is lost: exactly budget rows shipped, the rest is
+    # reported as per-client deferred carry-over
+    assert int(batch.n_shipped) == 64
+    assert int(batch.n_union) == 180
+    delivered = np.asarray(batch.delivered)
+    deferred = np.asarray(batch.deferred)
+    np.testing.assert_array_equal(delivered | deferred, masks)
+    assert not (delivered & deferred).any()
+    assert deferred.any(axis=1).all()  # both clients lost rows to paging
+    assert np.asarray(batch.client_overflow).all()
+
+
+def test_paged_stream_ships_coarse_rows_first(small_tree):
+    """With a priority key, the shipped subset must be exactly the lowest-
+    priority-ranked union rows, and the stream must stay ascending by gid."""
+    rng = np.random.default_rng(9)
+    masks = _masks_for_overlap(small_tree.n_pad, 3, 0.3, rng)
+    codec, _ = session_wire_format(small_tree, SessionConfig(tau=TAU))
+    prio = np.asarray(small_tree.node_levels())
+    batch = dp.build_delta_batch(small_tree.gaussians, codec,
+                                 jnp.asarray(masks), 128,
+                                 priority=small_tree.node_levels())
+    union = masks.any(axis=0)
+    gids = np.asarray(batch.union_gids)
+    shipped = gids[gids >= 0]
+    assert shipped.size == 128 == int(batch.n_shipped)
+    assert (np.diff(shipped) > 0).all()          # ascending, delta-codable
+    # priority cut: every shipped row ranks <= every deferred row under
+    # (level, -requesters, gid) lexicographic order
+    req = masks.sum(axis=0)
+    rank = sorted((int(prio[g]), -int(req[g]), int(g))
+                  for g in np.flatnonzero(union))
+    want = {g for _, _, g in rank[:128]}
+    assert set(shipped.tolist()) == want
 
 
 def test_first_owner_counts_partition_union(small_tree):
@@ -176,7 +215,12 @@ def test_colocated_fleet_bytes_grow_with_unique_not_b(small_tree):
     total1 = float(np.asarray(st1.sync_bytes).sum())
     totalb = float(np.asarray(stb.sync_bytes).sum())
     ids = float(np.asarray(st1.cut_size)[0])  # first sync: cut_add == cut
-    framing = ids * 2 + 64  # ID_BYTES_DELTA * ids + SYNC_HEADER_BYTES
+    # co-located clients pull from the same priority pages, so per-client
+    # framing = membership ids + sync header + page headers
+    pages = float(np.asarray(stb.pages)[0])
+    assert pages == float(np.asarray(st1.pages)[0])
+    framing = ids * 2 + 64 + pages * 16
+    # ID_BYTES_DELTA * ids + SYNC_HEADER_BYTES + pages * PAGE_HEADER_BYTES
     assert np.isclose(totalb, total1 + (b - 1) * framing, rtol=1e-5), \
         (totalb, total1, framing)
     # payload part is O(unique): far below B x the unicast accounting
@@ -186,15 +230,252 @@ def test_colocated_fleet_bytes_grow_with_unique_not_b(small_tree):
 
 
 def test_service_surfaces_delta_overflow(small_tree):
-    """A too-small delta_budget truncates the encode-once stream — the
-    service must surface that in ServiceStats, not just on last_delta."""
+    """A too-small delta_budget pages the encode-once stream — the service
+    must surface that PER CLIENT in ServiceStats (exactly the clients with
+    deferred rows), not as a fleet-wide broadcast."""
     cfg = SessionConfig(tau=TAU, cut_budget=8192)
     cams = np.asarray([[40.0, 40.0, 2.0], [41.0, 40.0, 2.0]], np.float32)
     tight = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
                            delta_budget=64)
     st = tight.sync(cams)
-    assert np.asarray(st.delta_overflow).all()
+    deferred = np.asarray(tight.last_delta.deferred).any(axis=1)
+    np.testing.assert_array_equal(np.asarray(st.delta_overflow), deferred)
+    assert deferred.all()  # both clients' Δs dwarf 64 rows here
     assert bool(tight.last_delta.overflow)
+    # shipped + owed partitions each client's Δ; bytes charge only shipped
+    shipped = np.asarray(st.delta_shipped)
+    owed = np.asarray(st.delta_deferred)
+    np.testing.assert_array_equal(shipped + owed, np.asarray(st.delta_size))
+    assert (shipped <= 64).all()
     ok = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True)
-    st = ok.sync(cams)  # default budget bounds the union — never truncates
+    st = ok.sync(cams)  # default budget bounds the union — never defers
     assert not np.asarray(st.delta_overflow).any()
+    assert not np.asarray(st.delta_deferred).any()
+
+
+def test_tight_budget_bytes_charge_only_shipped_rows(small_tree):
+    """Regression (the silent-overcharge bug): with a tight delta_budget,
+    per-client sync_bytes must count only the union rows actually shipped
+    this sync plus the page/sync framing — NOT the full requested Δ."""
+    from repro.core import manager as mgr
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [41.0, 40.0, 2.0]], np.float32)
+    tight = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                           delta_budget=64, page_size=16)
+    st = tight.sync(cams)
+    batch = tight.last_delta
+    delivered = np.asarray(batch.delivered)
+    share = delivered.sum(axis=0)
+    ids = np.asarray(st.cut_size)  # first sync: cut_add == cut, no removes
+    want = np.empty(2)
+    for b in range(2):
+        frac = (1.0 / np.maximum(share[delivered[b]], 1)).sum()
+        want[b] = (frac * (tight.bytes_per_g + mgr.ID_BYTES_DELTA)
+                   + ids[b] * mgr.ID_BYTES_DELTA + mgr.SYNC_HEADER_BYTES
+                   + int(np.asarray(batch.client_pages)[b])
+                   * mgr.PAGE_HEADER_BYTES)
+    np.testing.assert_allclose(np.asarray(st.sync_bytes), want, rtol=1e-5)
+    # the old accounting would have charged every requested row:
+    assert np.asarray(st.sync_bytes).sum() < (
+        np.asarray(st.delta_size, np.float64).sum() * tight.bytes_per_g)
+
+
+# -- paging convergence: tight budgets defer, never lose ---------------------
+
+
+def _converge(service, cams, oracle_delivered, budget):
+    """Drive `service` at static `cams` until its pending debt drains;
+    assert bitwise convergence to `oracle_delivered` within the page bound.
+    Returns the number of syncs taken."""
+    u = int(oracle_delivered.any(axis=0).sum())
+    max_syncs = -(-u // budget)  # ceil: one full-width page-set per sync
+    got = np.zeros_like(oracle_delivered)
+    for k in range(max_syncs):
+        service.sync(cams)
+        got |= np.asarray(service.last_delta.delivered)
+        if not np.asarray(service.state.pending).any():
+            break
+    assert not np.asarray(service.state.pending).any(), \
+        f"debt left after {max_syncs} syncs"
+    np.testing.assert_array_equal(got, oracle_delivered)
+    return k + 1
+
+
+@pytest.mark.parametrize("mode,impl", [("vmapped", "xla"), ("pooled", "xla"),
+                                       ("pooled", "pallas")])
+def test_paged_syncs_converge_bitwise_to_unbudgeted_oracle(small_tree, mode,
+                                                           impl):
+    """delta_budget < true union: every client's store must converge
+    BITWISE to the unbudgeted baseline in <= ceil(U/width) syncs — rows
+    arrive later, never never. All three sweep paths."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [46.0, 41.0, 2.5],
+                       [38.0, 47.0, 3.0]], np.float32)
+    kw = dict(focal=FOCAL, mode=mode, sweep_impl=impl, dedup=True)
+    base = svc.LodService(small_tree, cfg, 3, **kw)
+    base.sync(cams)
+    oracle = np.asarray(base.last_delta.delivered)
+    assert not np.asarray(base.state.pending).any()  # ample: no debt, ever
+
+    budget = 128
+    tight = svc.LodService(small_tree, cfg, 3, delta_budget=budget,
+                           page_size=64, **kw)
+    n_syncs = _converge(tight, cams, oracle, budget)
+    assert n_syncs > 1  # the budget actually paged the stream
+
+
+def _store_scatter(store, ids, dec):
+    sel = np.asarray(ids) >= 0
+    gids = np.asarray(ids)[sel]
+    for f in ("mu", "log_scale", "quat", "opacity", "sh"):
+        store.setdefault(f, {})
+        rows = np.asarray(getattr(dec, f))[sel]
+        for g, row in zip(gids.tolist(), rows):
+            store[f][g] = row
+    return store
+
+
+def test_paged_decoded_store_bitwise_equals_oracle_store(small_tree):
+    """The decode-side proof: accumulate one client's per-sync decoded Δ
+    slices from the paged stream and compare every row bitwise against the
+    single unbudgeted sync."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [44.0, 43.0, 2.5]], np.float32)
+    base = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True)
+    base.sync(cams)
+    want = _store_scatter({}, *base.client_delta(0))
+
+    budget = 128
+    tight = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                           delta_budget=budget, page_size=32)
+    got, syncs = {}, 0
+    while True:
+        tight.sync(cams)
+        got = _store_scatter(got, *tight.client_delta(0))
+        syncs += 1
+        if not np.asarray(tight.state.pending).any():
+            break
+        assert syncs < 64, "paged stream failed to drain"
+    assert syncs > 1
+    for f in want:
+        assert got[f].keys() == want[f].keys(), f
+        for g in want[f]:
+            np.testing.assert_array_equal(got[f][g], want[f][g],
+                                          err_msg=f"{f}/gid{g}")
+
+
+def test_paged_convergence_under_churn(small_tree):
+    """Churn safety: an evicted slot DROPS its deferred pages (no debt ever
+    reattaches to the slot's next tenant), an admitted client starts clean,
+    and survivors still converge bitwise to their unbudgeted replay."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cam_a = np.asarray([40.0, 40.0, 2.0], np.float32)
+    cam_b = np.asarray([46.0, 42.0, 2.5], np.float32)
+    cam_c = np.asarray([38.0, 47.0, 3.0], np.float32)
+    budget = 128
+    service = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                             capacity=4, delta_budget=budget, page_size=64)
+    service.sync(np.stack([cam_a, cam_b]))
+    assert np.asarray(service.state.pending).any()  # tight budget: debt
+
+    # evict the indebted client 1: its slot's debt must vanish immediately
+    slot_b = service._slot_of(1)
+    assert np.asarray(service.state.pending)[slot_b].any()
+    service.evict(1)
+    assert not np.asarray(service.state.pending)[slot_b].any()
+
+    # admit a newcomer (recycles the slot) — starts with zero debt
+    cid_c = service.admit(cam_c)
+    slot_c = service._slot_of(cid_c)
+    assert not np.asarray(service.state.pending)[slot_c].any()
+
+    # drive to convergence for the survivors
+    for _ in range(32):
+        service.sync({0: cam_a, cid_c: cam_c})
+        if not np.asarray(service.state.pending).any():
+            break
+    assert not np.asarray(service.state.pending).any()
+
+    # each survivor's store == a fresh ample single-client replay's store
+    for cid, cam in ((0, cam_a), (cid_c, cam_c)):
+        ref = svc.LodService(small_tree, cfg, 1, focal=FOCAL, dedup=True)
+        ref.sync(cam[None])
+        slot = service._slot_of(cid)
+        np.testing.assert_array_equal(
+            np.asarray(service.state.mgr.client_has[slot]),
+            np.asarray(ref.state.mgr.client_has[0]), err_msg=f"cid{cid}")
+
+
+# -- closed-loop bitrate control ---------------------------------------------
+
+
+def test_rate_control_step_unit():
+    """The controller's pure update rule, pinned: multiplicative tracking
+    clipped to [x0.5, x2], one-page floor, tau escalation only at the floor,
+    decay once comfortably under target, uncontrolled slots untouched."""
+    target = np.asarray([1e4, 1e4, np.inf, 1e4])
+    allowance = np.asarray([1000, 64, -1, 1000])
+    tau = np.ones(4, np.float32)
+    # client 0 overshoots 4x -> clipped halving; client 1 at the floor ->
+    # tau escalates; client 2 uncontrolled; client 3 on target -> unchanged
+    measured = np.asarray([4e4, 4e4, 123.0, 1e4])
+    allow2, tau2 = svc.rate_control_step(target, measured, allowance, tau,
+                                         page_size=64, max_rows=4096)
+    assert allow2.tolist() == [500, 64, -1, 1000]
+    assert tau2[0] == 1.0 and tau2[1] == pytest.approx(1.25)
+    assert tau2[2] == 1.0 and tau2[3] == 1.0
+    # undershoot far below target: allowance doubles (clip x2), and an
+    # escalated tau decays back toward 1.0
+    measured = np.asarray([1e3, 1e3, 0.0, 1e3])
+    allow3, tau3 = svc.rate_control_step(target, measured, allow2, tau2,
+                                         page_size=64, max_rows=4096)
+    assert allow3.tolist() == [1000, 128, -1, 2000]
+    assert tau3[1] == 1.0  # 1.25 / 1.25, floored at 1.0
+    # idle sync (0 measured bytes) leaves the controlled state alone
+    assert allow3[2] == -1 and tau3[2] == 1.0
+
+
+def test_bandwidth_tiers_shape_the_stream(small_tree):
+    """Heterogeneous bandwidth on one fleet: the narrow client is paced
+    (rows deferred, allowance tightened by the loop) while the uncapped
+    client drinks the full stream — and once the fleet goes static, every
+    deferred row still arrives (rate control never loses data)."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    rng = np.random.default_rng(17)
+    cams = np.asarray([[40.0, 40.0, 2.0], [41.0, 40.5, 2.2]], np.float32)
+    narrow = 2e3  # bytes/sync — far below any cold Δcut
+    service = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                             bandwidth=[narrow, 1e9], page_size=64)
+    assert service.client_bandwidth(0)[0] == narrow
+    seed_allow = service.client_bandwidth(0)[1]
+    # the uncapped client's allowance saturates at the stream budget
+    assert service.client_bandwidth(1)[1] == service.delta_budget
+
+    narrow_bytes, wide_bytes, narrow_deferred = [], [], 0
+    for _ in range(6):
+        st = service.sync(cams)
+        narrow_bytes.append(float(np.asarray(st.sync_bytes)[0]))
+        wide_bytes.append(float(np.asarray(st.sync_bytes)[1]))
+        narrow_deferred += int(np.asarray(st.delta_deferred)[0] > 0)
+        cams = cams + rng.uniform(1.0, 3.0, cams.shape).astype(np.float32)
+    # the cold sync's union dwarfs the narrow client's row allowance...
+    assert narrow_deferred > 0
+    # ...so it is paced far below the uncapped client
+    assert narrow_bytes[0] < wide_bytes[0]
+    # the loop reacts to the overshoot: allowance never exceeds its seed,
+    # and the tau fallback only ever escalates (scale >= 1)
+    assert service.client_bandwidth(0)[1] <= seed_allow
+    assert service.client_bandwidth(0)[2] >= 1.0
+    assert service.client_bandwidth(1)[1] == service.delta_budget
+
+    # stop moving: the narrow client's debt must fully drain (paged, never
+    # lost) — the acceptance claim under rate control
+    for _ in range(64):
+        service.sync(cams)
+        if not np.asarray(service.state.pending).any():
+            break
+    assert not np.asarray(service.state.pending).any()
+
+    # tier names resolve through BANDWIDTH_TIERS at admission too
+    cid = service.admit(cams[0], bandwidth="phone")
+    assert service.client_bandwidth(cid)[0] == svc.BANDWIDTH_TIERS["phone"]

@@ -265,9 +265,11 @@ def _fresh_slot_reference(tree, cfg, capacity):
 
 def _assert_slot_fresh(state, fresh, slot, ctx=""):
     for got_leaf, want_leaf in zip(jax.tree_util.tree_leaves(
-            (state.mgr, state.temporal, state.cut_gids, state.sync_index)),
+            (state.mgr, state.temporal, state.cut_gids, state.sync_index,
+             state.pending)),
             jax.tree_util.tree_leaves(
-            (fresh.mgr, fresh.temporal, fresh.cut_gids, fresh.sync_index))):
+            (fresh.mgr, fresh.temporal, fresh.cut_gids, fresh.sync_index,
+             fresh.pending))):
         np.testing.assert_array_equal(np.asarray(got_leaf[slot]),
                                       np.asarray(want_leaf[slot]),
                                       err_msg=ctx)
@@ -291,7 +293,8 @@ def test_inactive_slots_are_provably_free(small_tree):
         assert inactive.sum() == 5
         for name in ("cut_size", "delta_size", "unique_delta", "sync_bytes",
                      "dedup_bytes_saved", "nodes_touched", "resweeps",
-                     "client_resident", "overflow", "delta_overflow"):
+                     "client_resident", "overflow", "delta_overflow",
+                     "delta_shipped", "delta_deferred", "pages"):
             col = np.asarray(getattr(stats, name))
             assert not col[inactive].any(), (f, name)
         # no union rows on behalf of an inactive slot

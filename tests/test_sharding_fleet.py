@@ -369,7 +369,8 @@ from repro.sharding import fleet as shf
 assert len(jax.devices()) == 8
 STATS = ("cut_size", "delta_size", "sync_bytes", "unique_delta",
          "dedup_bytes_saved", "nodes_touched", "resweeps",
-         "client_resident", "overflow", "delta_overflow")
+         "client_resident", "overflow", "delta_overflow",
+         "delta_shipped", "delta_deferred", "pages")
 GAUSS = ("mu", "log_scale", "quat", "opacity", "sh")
 
 rng = np.random.default_rng(11)
@@ -505,6 +506,29 @@ cmp_sync("shrunk", base.sync(dict(pos)), shrd.sync(dict(pos)), base, shrd)
 for leaf in jax.tree_util.tree_leaves(shrd.state):
     if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == 2:
         assert leaf.sharding.spec[0] in ("clients", None)
+
+# paged Δ-stream under the mesh: a tight budget pages the cold union and
+# the carried debt drains to bitwise equality with an un-budgeted fleet
+am = svc.LodService(tree, cfg, 4, focal=1400.0, capacity=8, mode="pooled",
+                    dedup=True, mesh=mesh)
+tp = svc.LodService(tree, cfg, 4, focal=1400.0, capacity=8, mode="pooled",
+                    dedup=True, delta_budget=32, page_size=16, mesh=mesh)
+pos = np.asarray([[8.0, 8.0, 2.0], [20.0, 9.0, 2.5],
+                  [10.0, 22.0, 3.0], [24.0, 24.0, 2.0]], np.float32)
+st = tp.sync(pos); am.sync(pos)
+assert int(np.asarray(st.delta_deferred).sum()) > 0
+# overflow sync: width == budget (32), divisible by both mesh axes, so the
+# declared union/clients layouts hold exactly
+for leaf in (tp.last_delta.union_gids, tp.last_delta.payload.pos_q):
+    assert leaf.sharding.spec[0] == "slabs", leaf.sharding
+assert tp.last_delta.ref_mask.sharding.spec == P("clients", "slabs")
+n_paged = 1
+while np.asarray(tp.state.pending).any() and n_paged < 64:
+    tp.sync(pos); am.sync(pos); n_paged += 1
+assert not np.asarray(tp.state.pending).any()
+np.testing.assert_array_equal(np.asarray(tp.state.mgr.client_has),
+                              np.asarray(am.state.mgr.client_has))
+results["paged_syncs"] = n_paged
 
 # bounded recompilation with the mesh on: parked re-syncs add no traces
 import repro.serve.lod_service as S
