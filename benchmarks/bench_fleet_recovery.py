@@ -1,0 +1,170 @@
+"""Elastic fault-tolerant serving: what a crash actually costs.
+
+Two experiments on the pooled production scheduler (dedup on):
+
+  1. **Snapshot round-trip vs fleet size** — a B-client fleet (B ∈ {4, 16,
+     64}; smoke {2, 4, 8}) synced warm, then `snapshot` → kill → `restore`:
+     reported per B are the snapshot's on-disk bytes, the atomic save wall
+     time, the restore wall time (manifest + leaf load + device_put + the
+     host-mirror cross-check), and the cold journal `recover` time when the
+     crash happens mid-interval (restore + a fixed 4-sync journal-tail
+     replay).
+  2. **Journal-replay cost vs snapshot cadence K** — one fleet journaled
+     through a fixed schedule with snapshot-every-K for K ∈ {1, 4, 16},
+     crashed at the end: `recover` restores the newest snapshot and
+     replays at most K syncs, so K is the dial trading steady-state
+     snapshot I/O against worst-case recovery wall time. Reported per K:
+     records replayed and total recover wall time.
+
+The headline: snapshot bytes and save/restore time scale with the slot
+array (capacity x per-slot state), not with the city tree (the shared tree
+is fingerprinted, never serialized), and recovery wall time is
+restore + K syncs — the same dial the ROADMAP's elastic-serving row
+promises.
+
+Set NEBULA_BENCH_SMOKE=1 for the CI trajectory run (small scene, small
+fleets, fewer syncs → every row still present in
+BENCH_fleet_recovery.json).
+"""
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import city_scene, emit
+from repro.core.pipeline import SessionConfig
+from repro.serve import lod_service as svc
+from repro.serve import recovery as rec
+
+FOCAL, TAU = 260.0, 48.0
+TAIL = 4  # journal records between the last snapshot and the "crash"
+
+
+def _smoke() -> bool:
+    return os.environ.get("NEBULA_BENCH_SMOKE", "") not in ("", "0")
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+class _Walk:
+    def __init__(self, rng, extent, step=3.0):
+        self.rng, self.step = rng, step
+        self.lo = np.asarray([0.15 * extent[0], 0.15 * extent[1], 1.5],
+                             np.float32)
+        self.hi = np.asarray([0.85 * extent[0], 0.85 * extent[1], 8.0],
+                             np.float32)
+        self.pos = {}
+
+    def cams(self, service):
+        out = {}
+        for cid in service.active_ids:
+            p = self.pos.get(cid)
+            p = (self.rng.uniform(self.lo, self.hi).astype(np.float32)
+                 if p is None
+                 else p + self.rng.normal(0, self.step, 3).astype(np.float32))
+            self.pos[cid] = np.clip(p, self.lo, self.hi)
+            out[cid] = self.pos[cid]
+        return out
+
+
+def run():
+    scale = "small" if _smoke() else "medium"
+    fleets = (2, 4, 8) if _smoke() else (4, 16, 64)
+    warm = 2 if _smoke() else 3
+    _cfg, _leaves, tree = city_scene(scale)
+    hi = np.asarray(tree.gaussians.mu).max(axis=0)
+    extent = (float(hi[0]), float(hi[1]))
+    cfg = SessionConfig(tau=TAU, cut_budget=16384)
+    emit("fleet_recovery/scene", 0.0,
+         f"scale={scale} nodes={tree.meta.n_real} fleets={list(fleets)} "
+         f"tail={TAIL}")
+
+    # -- (1) snapshot round-trip vs fleet size -------------------------------
+    for b in fleets:
+        walk = _Walk(np.random.default_rng(5), extent)
+        service = svc.LodService(tree, cfg, b, focal=FOCAL, mode="pooled",
+                                 dedup=True)
+        for _ in range(warm):
+            np.asarray(service.sync(walk.cams(service)).sync_bytes)
+
+        snap = tempfile.mkdtemp(prefix="nebula_snap_")
+        try:
+            t0 = time.perf_counter()
+            final = service.snapshot(snap)
+            t_save = time.perf_counter() - t0
+            nbytes = _dir_bytes(final)
+            t0 = time.perf_counter()
+            restored = svc.LodService.restore(tree, snap)
+            t_restore = time.perf_counter() - t0
+            assert restored.active_ids == service.active_ids
+        finally:
+            shutil.rmtree(snap, ignore_errors=True)
+
+        # crash mid-interval: restore + TAIL-sync journal replay
+        work = tempfile.mkdtemp(prefix="nebula_rec_")
+        try:
+            mgr = rec.RecoveryManager(service, work, every=10**6, keep=2)
+            for _ in range(TAIL):
+                np.asarray(mgr.sync(walk.cams(service)).sync_bytes)
+            del mgr, service
+            t0 = time.perf_counter()
+            _mgr2, replayed = rec.recover(tree, work)
+            t_recover = time.perf_counter() - t0
+            assert replayed == TAIL
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+
+        key = f"fleet_recovery/B{b}"
+        emit(f"{key}/snapshot_bytes", float(nbytes),
+             f"capacity={restored.capacity} "
+             f"per_slot={nbytes / restored.capacity / 1e3:.0f}kB")
+        emit(f"{key}/save_us", t_save * 1e6,
+             f"{nbytes / max(t_save, 1e-9) / 1e6:.0f} MB/s atomic")
+        emit(f"{key}/restore_us", t_restore * 1e6,
+             "load + device_put + mirror cross-check")
+        emit(f"{key}/recover_us", t_recover * 1e6,
+             f"restore + {replayed}-sync journal tail")
+
+    # -- (2) journal-replay cost vs snapshot cadence K -----------------------
+    b = fleets[1]
+    # deliberately NOT a multiple of any K, so every cadence leaves a
+    # nonzero journal tail to replay
+    n_syncs = 7 if _smoke() else 18
+    for k in (1, 4, 16):
+        walk = _Walk(np.random.default_rng(7), extent)
+        service = svc.LodService(tree, cfg, b, focal=FOCAL, mode="pooled",
+                                 dedup=True)
+        np.asarray(service.sync(walk.cams(service)).sync_bytes)
+        work = tempfile.mkdtemp(prefix="nebula_reck_")
+        try:
+            t0 = time.perf_counter()
+            mgr = rec.RecoveryManager(service, work, every=k, keep=3)
+            for _ in range(n_syncs):
+                np.asarray(mgr.sync(walk.cams(service)).sync_bytes)
+            t_run = time.perf_counter() - t0
+            del mgr, service
+            t0 = time.perf_counter()
+            _mgr2, replayed = rec.recover(tree, work)
+            t_recover = time.perf_counter() - t0
+            assert replayed <= k
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+        emit(f"fleet_recovery/K{k}/recover_us", t_recover * 1e6,
+             f"replayed={replayed} of {n_syncs} journaled syncs "
+             f"(bound: {k}); journaled run={t_run * 1e3:.0f}ms")
+    emit("fleet_recovery/summary", 0.0,
+         "snapshot cost tracks the slot array, never the shared tree; "
+         "recovery = restore + at most K re-executed syncs")
+
+
+if __name__ == "__main__":
+    run()

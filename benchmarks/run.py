@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.bench_multiclient",  # multi-user cloud serving (ROADMAP)
     "benchmarks.bench_fleet_sync",   # encode-once fleet sync (dedup × B)
     "benchmarks.bench_fleet_churn",  # ragged fleet lifecycle (admit/evict)
+    "benchmarks.bench_fleet_recovery",  # snapshot/restore + journal replay
     "benchmarks.bench_fleet_shard",  # mesh-sharded fleet (clients × slabs)
     "benchmarks.bench_delta_stream",  # paged Δ stream (pressure × tier)
     "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24

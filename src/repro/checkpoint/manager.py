@@ -68,15 +68,44 @@ def save(directory: str, step: int, tree: Any,
     return final
 
 
+def _step_of(name: str) -> Optional[int]:
+    """Parse a `step_<N>` directory name; None for anything else (torn
+    `.tmp` leftovers, foreign files, non-integer suffixes). Discovery and GC
+    must both survive junk in the checkpoint directory — a single stray
+    `step_backup` dir must not take down `latest_step` with a ValueError."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
     steps = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        step = _step_of(name)
+        if step is not None:
             if os.path.exists(os.path.join(directory, name, _MANIFEST)):
-                steps.append(int(name.split("_")[1]))
+                steps.append(step)
     return max(steps) if steps else None
+
+
+def valid_steps(directory: str):
+    """All complete (manifest-bearing) step numbers in `directory`,
+    descending — the fallback order elastic recovery walks when the newest
+    snapshot turns out torn or corrupt."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        step = _step_of(name)
+        if step is not None:
+            if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+                steps.append(step)
+    return sorted(steps, reverse=True)
 
 
 def restore(directory: str, step: int, like: Any,
@@ -99,10 +128,13 @@ def restore(directory: str, step: int, like: Any,
         expect = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expect:
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {expect}")
+        # the manifest dtype is authoritative on BOTH paths (a drifted leaf
+        # file used to restore uncast — silently wrong — under a mesh)
+        arr = arr.astype(entry["dtype"], copy=False)
         if shardings is not None:
             leaves.append(jax.device_put(arr, shard_items[i][1]))
         else:
-            leaves.append(jax.device_put(arr.astype(entry["dtype"])))
+            leaves.append(jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -120,6 +152,10 @@ class CheckpointManager:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # steps a concurrent restore() is currently reading — _gc must never
+        # delete the checkpoint under a reader, even with keep=1
+        self._lock = threading.Lock()
+        self._reading: set = set()
         os.makedirs(directory, exist_ok=True)
 
     def wait(self):
@@ -148,9 +184,13 @@ class CheckpointManager:
 
     def _gc(self):
         steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+            s for s in (_step_of(n) for n in os.listdir(self.directory))
+            if s is not None)
+        with self._lock:
+            protected = set(self._reading)
         for s in steps[: -self.keep]:
+            if s in protected:
+                continue
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)
 
@@ -164,4 +204,10 @@ class CheckpointManager:
         step = latest_step(self.directory) if step is None else step
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        return restore(self.directory, step, like, shardings)
+        with self._lock:
+            self._reading.add(step)
+        try:
+            return restore(self.directory, step, like, shardings)
+        finally:
+            with self._lock:
+                self._reading.discard(step)

@@ -57,6 +57,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import compression as comp
 from repro.core import lod_search as ls
@@ -89,6 +90,12 @@ class DeltaBatch:
                 (page-header framing charge)
     pages:      () int32 — priority pages in this sync's shared stream
                 (⌈n_shipped/page_size⌉)
+    row_page:   (U,) int32 — the PRIORITY page each wire-order row shipped
+                in (-1 for padding rows past n_shipped). Wire order is
+                ascending-gid but pages are priority ranks, so a page's rows
+                are interleaved through the stream — this map is what lets a
+                client turn "page p failed its checksum" into the exact row
+                set to NACK.
     overflow:   () bool — some row was deferred somewhere in the fleet (the
                 old truncation flag, now recoverable instead of a silent
                 loss)
@@ -104,6 +111,7 @@ class DeltaBatch:
     client_overflow: jax.Array
     client_pages: jax.Array
     pages: jax.Array
+    row_page: jax.Array
     overflow: jax.Array
 
     @property
@@ -165,18 +173,20 @@ def _union_refs(wanted: jax.Array, union: jax.Array, priority: jax.Array,
     order = jnp.argsort(jnp.where(valid, take, jnp.int32(n)))
     gids = jnp.where(valid[order], take[order], -1).astype(jnp.int32)
     ref = ingest[:, order]
+    row_page = jnp.where(valid[order], page_of[order], -1).astype(jnp.int32)
     if mesh is not None:
         from repro.sharding.fleet import constrain_fleet
         # the union row axis shards over `slabs` (codec work parallelism);
         # per-client leaves stay with their client shard
         gids = constrain_fleet(gids, ("union",), mesh)
         ref = constrain_fleet(ref, ("clients", "union"), mesh)
+        row_page = constrain_fleet(row_page, ("union",), mesh)
         delivered = constrain_fleet(delivered, ("clients", None), mesh)
         deferred = constrain_fleet(deferred, ("clients", None), mesh)
         client_overflow = constrain_fleet(client_overflow, ("clients",), mesh)
         client_pages = constrain_fleet(client_pages, ("clients",), mesh)
     return (gids, ref, delivered, deferred, client_overflow, client_pages,
-            pages, n_shipped)
+            pages, n_shipped, row_page)
 
 
 def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
@@ -235,8 +245,9 @@ def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
              else jnp.asarray(allowance, jnp.int32))
     psize = width if page_size is None else max(1, min(int(page_size), width))
     (gids, ref, delivered, deferred, client_overflow, client_pages, pages,
-     n_shipped) = _union_refs(wanted, union, priority, allow, width=width,
-                              page_size=psize, mesh=mesh)
+     n_shipped, row_page) = _union_refs(wanted, union, priority, allow,
+                                        width=width, page_size=psize,
+                                        mesh=mesh)
     payload = comp.encode_rows(codec, gaussians, gids)
     if mesh is not None:
         from repro.sharding.fleet import constrain_fleet
@@ -247,7 +258,7 @@ def build_delta_batch(gaussians: Gaussians, codec: comp.Codec,
                       payload=payload, ref_mask=ref, delivered=delivered,
                       deferred=deferred, client_overflow=client_overflow,
                       client_pages=client_pages, pages=pages,
-                      overflow=client_overflow.any())
+                      row_page=row_page, overflow=client_overflow.any())
 
 
 def decode_client(codec: comp.Codec, batch: DeltaBatch, sh_k: int,
@@ -281,6 +292,54 @@ def encode_per_client(gaussians: Gaussians, codec: comp.Codec,
         ids = ids.astype(jnp.int32)
         out.append((ids, comp.encode_rows(codec, gaussians, ids),
                     count > jnp.int32(budget)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# page integrity (loss detection + NACK retransmit)
+# ---------------------------------------------------------------------------
+
+# Knuth multiplicative hash constant — mixes each gid before the per-page
+# sum so a swap of two gids between pages (same total) still flips both
+# checksums; +1 makes the count of rows in the page part of the sum too
+# (a dropped gid-0 row would otherwise hash to 0 and vanish).
+_CKSUM_MIX = np.uint32(2654435761)
+
+
+def page_checksums(batch: DeltaBatch) -> np.ndarray:
+    """(pages,) uint32 — the per-page content checksum carried in each
+    priority page's wire header (`manager.PAGE_HEADER_BYTES` already budgets
+    the 4-byte slot). Host-side: checksums are wire framing, computed once
+    per sync when the stream is serialized, never inside the jitted sync.
+
+    A page's checksum covers the gids of its rows (order-independent
+    wraparound sum of mixed gids), so a receiver that re-derives it over the
+    rows it parsed detects any dropped/corrupted page without trusting the
+    radio link's own CRC."""
+    row_page = np.asarray(batch.row_page)
+    gids = np.asarray(batch.union_gids)
+    n_pages = int(np.asarray(batch.pages))
+    out = np.zeros((max(n_pages, 1),), np.uint32)
+    rows = row_page >= 0
+    with np.errstate(over="ignore"):
+        mix = gids[rows].astype(np.uint32) * _CKSUM_MIX + np.uint32(1)
+    np.add.at(out, row_page[rows], mix)
+    return out[:n_pages]
+
+
+def lost_row_mask(batch: DeltaBatch, client: int, lost_pages) -> np.ndarray:
+    """(N,) bool node mask of the rows slot `client` INGESTED this sync from
+    the given priority pages — the retransmit set for a NACK naming pages
+    whose checksum failed client-side. Rows of a lost page the client did
+    not reference cost it nothing and are not re-queued."""
+    row_page = np.asarray(batch.row_page)
+    gids = np.asarray(batch.union_gids)
+    ref = np.asarray(batch.ref_mask)[client]
+    n = batch.delivered.shape[1]
+    lost = np.asarray(sorted(set(int(p) for p in lost_pages)), np.int64)
+    rows = ref & np.isin(row_page, lost) & (gids >= 0)
+    out = np.zeros((n,), bool)
+    out[gids[rows]] = True
     return out
 
 

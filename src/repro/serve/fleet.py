@@ -40,6 +40,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import lod_search as ls
 
@@ -134,6 +135,19 @@ def fleet_grow(fleet: FleetState, new_capacity: int) -> FleetState:
                                     jnp.full((pad,), -1, jnp.int32)]),
         next_id=fleet.next_id,
     )
+
+
+def fleet_mirror(fleet: FleetState):
+    """Host-numpy copy of the fleet bookkeeping: (active (C,) bool,
+    client_ids (C,) int64, next_id int) — the control-plane mirror
+    `LodService` keeps beside the device state. Snapshot restore rebuilds
+    the mirror from the restored device `FleetState` through this and
+    cross-checks it against the snapshotted host copy, so a snapshot whose
+    two halves disagree is a typed error, never a silently divergent
+    control plane (repro.serve.recovery)."""
+    return (np.array(jax.device_get(fleet.active), dtype=bool),
+            np.array(jax.device_get(fleet.client_ids), dtype=np.int64),
+            int(jax.device_get(fleet.next_id)))
 
 
 # ---------------------------------------------------------------------------

@@ -234,6 +234,20 @@ def service_admit_slot(state: ServiceState, slot, client_id) -> ServiceState:
 
 
 @jax.jit
+def service_nack_rows(state: ServiceState, slot, lost_rows) -> ServiceState:
+    """Re-queue one slot's lost Δ rows as pending debt (the page-loss NACK
+    path): the rows fold into the next sync's union exactly like
+    budget-deferred pages, so the retransmit rides the normal priority
+    stream — no special wire format, and convergence-to-oracle holds under
+    loss for the same reason it holds under paging. `slot`/`lost_rows` are
+    TRACED (one trace per capacity bucket). Inactive slots are a no-op (a
+    NACK racing an eviction must not resurrect the slot's debt)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    row = state.pending[slot] | (lost_rows & state.fleet.active[slot])
+    return dataclasses.replace(state, pending=state.pending.at[slot].set(row))
+
+
+@jax.jit
 def service_evict_slot(state: ServiceState, slot) -> ServiceState:
     """Evict the client in `slot`: free the slot AND reset its leaves
     immediately, so a recycled slot is bit-for-bit indistinguishable from a
@@ -995,6 +1009,14 @@ class LodService:
         else:
             self._allowance[slot] = -1
 
+    def set_bandwidth(self, client_id: int, bandwidth=None) -> None:
+        """Re-tier a live client's downlink mid-session (a `BANDWIDTH_TIERS`
+        name, bytes/sync, or None to turn control off): reseed its
+        closed-loop controller exactly like `admit(bandwidth=...)` would —
+        the loop re-converges from the seed allowance over the next syncs."""
+        slot = self._slot_of(client_id)
+        self._set_bandwidth_slot(slot, _bandwidth_bytes(bandwidth))
+
     def client_bandwidth(self, client_id: int):
         """One live client's (target_bytes, row_allowance, tau_scale)
         controller triple (target inf / allowance None when uncontrolled)."""
@@ -1124,6 +1146,15 @@ class LodService:
             [self._allowance, np.full(pad, -1, np.int64)])
         self._tau_scale = np.concatenate(
             [self._tau_scale, np.ones(pad, np.float32)])
+        if self._last_stats is not None:
+            # the feedback source keeps its pre-growth leading dim — pad
+            # with zero rows (new slots are uncontrolled until admitted, and
+            # a zero measurement is the no-op of the multiplicative loop)
+            self._last_stats = jax.tree_util.tree_map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.zeros((new_capacity - a.shape[0],)
+                                  + a.shape[1:], a.dtype)]),
+                self._last_stats)
         self.capacity = new_capacity
         if self._delta_budget_arg is None:
             self.delta_budget = min(self.tree.n_pad,
@@ -1161,17 +1192,23 @@ class LodService:
         if self._delta_budget_arg is None:
             self.delta_budget = min(self.tree.n_pad,
                                     self.cfg.cut_budget * self.capacity)
+        # client-leading device pytrees that may predate a capacity growth
+        # (their leading dim = the capacity at their sync): slots beyond
+        # them have no row — give those an all-zero one
+        def _remap_rows(a):
+            safe = np.minimum(perm, a.shape[0] - 1)
+            keep = (perm < a.shape[0]).reshape((-1,) + (1,) *
+                                               (a.ndim - 1))
+            return jnp.where(keep, a[safe], jnp.zeros((), a.dtype))
+        if self._last_stats is not None:
+            # the rate controller's feedback source follows the slot
+            # permutation like every other per-slot mirror
+            self._last_stats = jax.tree_util.tree_map(_remap_rows,
+                                                      self._last_stats)
         if self.last_delta is not None:
-            # the payload may predate a capacity growth (its per-client rows
-            # = the capacity at its sync): slots beyond it have no slice —
-            # give them an all-zero row (their _delta_ids entry is -1, so
-            # client_delta already refuses them). Every client-leading leaf
-            # of the batch remaps through the same permutation.
-            def _remap_rows(a):
-                safe = np.minimum(perm, a.shape[0] - 1)
-                keep = (perm < a.shape[0]).reshape((-1,) + (1,) *
-                                                  (a.ndim - 1))
-                return jnp.where(keep, a[safe], jnp.zeros((), a.dtype))
+            # slots with no slice in the payload get an all-zero row (their
+            # _delta_ids entry is -1, so client_delta already refuses them);
+            # every client-leading leaf remaps through the same permutation
             self.last_delta = dataclasses.replace(
                 self.last_delta,
                 ref_mask=_remap_rows(self.last_delta.ref_mask),
@@ -1186,6 +1223,62 @@ class LodService:
         self._rcfg_cache.clear()
         self._stack_cache.clear()
         return target
+
+    # -- elasticity: live mesh resize + snapshot/restore ----------------------
+
+    def resize_mesh(self, mesh) -> None:
+        """Move the LIVE service onto a different `clients`×`slabs` serving
+        mesh (bigger, smaller, or `None` for the single-device layout)
+        without dropping a client: every `ServiceState` leaf (and the
+        device-resident slab tables) is re-placed under the new mesh's fleet
+        shardings — the in-memory analog of restore-onto-a-new-mesh. The
+        traced signatures of the jitted sync paths include the static mesh,
+        so the first sync after a resize retraces once (the same contract as
+        a capacity change); results stay bitwise (the divisibility fallback
+        replicates anything the new mesh cannot split)."""
+        self.mesh = mesh
+        if mesh is None:
+            dev = jax.devices()[0]
+            self.state = jax.device_put(self.state, dev)
+            if self.tables is not None:
+                self.tables = jax.device_put(self.tables, dev)
+            if self.last_delta is not None:
+                self.last_delta = jax.device_put(self.last_delta, dev)
+        else:
+            self.state = shd.shard_service_state(mesh, self.state)
+            if self.tables is not None:
+                self.tables = shd.shard_slab_tables(mesh, self.tables)
+            if self.last_delta is not None:
+                # mixed logical axes (union rows vs client slots): replicate
+                # — always a correct placement for a broadcast stream
+                from jax.sharding import NamedSharding, PartitionSpec
+                self.last_delta = jax.device_put(
+                    self.last_delta, NamedSharding(mesh, PartitionSpec()))
+        self._rcfg_cache.clear()
+        self._stack_cache.clear()
+
+    def snapshot(self, directory: str, step: int = 0, *,
+                 journal_seq: int = 0) -> str:
+        """Atomically serialize the full service — `ServiceState` pytree,
+        host control-plane mirrors, bitrate-controller state, and static
+        config — as checkpoint `step_<step>` under `directory`
+        (repro.serve.recovery.snapshot_service). Returns the final path."""
+        from repro.serve import recovery
+        return recovery.snapshot_service(self, directory, step=step,
+                                         journal_seq=journal_seq)
+
+    @classmethod
+    def restore(cls, tree: LodTree, directory: str, step: Optional[int] = None,
+                mesh=None) -> "LodService":
+        """Rebuild a service from a `snapshot` directory against the SAME
+        shared city tree (fingerprint-checked), optionally onto a different
+        serving mesh (reshard-on-load; `mesh=None` restores single-device).
+        Survivors replay bitwise vs the uninterrupted service
+        (tests/test_fleet_recovery.py). Raises
+        `repro.serve.recovery.RecoveryError` on any torn/corrupt/mismatched
+        snapshot — never a silently divergent service."""
+        from repro.serve import recovery
+        return recovery.restore_service(tree, directory, step=step, mesh=mesh)
 
     # -- sync -----------------------------------------------------------------
 
@@ -1276,6 +1369,68 @@ class LodService:
                              f"admission — sync first")
         return dp.decode_client(self.codec, self.last_delta,
                                 self.tree.gaussians.sh.shape[1], slot)
+
+    def delta_checksums(self) -> np.ndarray:
+        """(pages,) uint32 per-page checksums of the latest sync's shared
+        stream — the values the wire serializer writes into each page header
+        (`manager.PAGE_HEADER_BYTES` budgets the slot). A client re-derives
+        each page's checksum from the rows it parsed and NACKs mismatches."""
+        if self.last_delta is None:
+            raise ValueError("no sync performed yet (or dedup=False)")
+        return dp.page_checksums(self.last_delta)
+
+    def resolve_nack(self, client_id: int, lost_pages) -> np.ndarray:
+        """READ-ONLY half of the page-loss NACK: the ascending gids client
+        `client_id` ingested from the named priority pages of the LATEST
+        sync's stream — the rows a checksum-failed page costs it, resolved
+        against the current payload. `nack` applies them; a journaling layer
+        (repro.serve.recovery) records the resolved gids instead of the page
+        numbers, so crash replay never depends on a payload that died with
+        the process.
+
+        Like `client_delta`, the NACK is a per-sync artifact: it must name
+        pages of the latest payload, and a client admitted (or recycled)
+        after that sync has no rows in it — that is an error, never a silent
+        requeue of the previous tenant's rows."""
+        if self.last_delta is None:
+            raise ValueError("no sync performed yet (or dedup=False)")
+        slot = self._slot_of(client_id)
+        if (slot >= len(self._delta_ids)
+                or self._delta_ids[slot] != client_id):
+            raise ValueError(f"latest payload predates client {client_id}'s "
+                             f"admission — nothing to NACK")
+        n_pages = int(np.asarray(self.last_delta.pages))
+        pages = sorted(set(int(p) for p in lost_pages))
+        bad = [p for p in pages if not 0 <= p < n_pages]
+        if bad:
+            raise ValueError(f"NACK names pages {bad} outside the latest "
+                             f"stream's {n_pages} pages")
+        return np.flatnonzero(dp.lost_row_mask(self.last_delta, slot, pages))
+
+    def nack_rows(self, client_id: int, gids) -> int:
+        """Re-queue specific Gaussians as one live client's pending debt —
+        the APPLY half of the NACK (and the form the sync journal replays):
+        the rows fold into the next sync's union like budget-deferred pages
+        and retransmit through the normal priority stream. Returns the
+        number of rows queued."""
+        slot = self._slot_of(client_id)
+        g = np.asarray(list(gids), np.int64)
+        if g.size and (g.min() < 0 or g.max() >= self.tree.n_pad):
+            raise ValueError(f"NACK gids outside [0, {self.tree.n_pad})")
+        mask = np.zeros((self.tree.n_pad,), bool)
+        mask[g] = True
+        self.state = shd.shard_service_state(
+            self.mesh, service_nack_rows(self.state, slot,
+                                         jnp.asarray(mask)))
+        return int(mask.sum())
+
+    def nack(self, client_id: int, lost_pages) -> int:
+        """Client-reported page loss on the LATEST sync's stream: re-queue
+        the rows `client_id` ingested from the named priority pages as
+        `ServiceState.pending` debt (`resolve_nack` + `nack_rows`). Returns
+        the number of rows re-queued."""
+        return self.nack_rows(client_id,
+                              self.resolve_nack(client_id, lost_pages))
 
     # -- fallback rendering ---------------------------------------------------
 

@@ -108,6 +108,18 @@ def resolve_mesh(mesh: Optional[Mesh]) -> Optional[Mesh]:
     return mesh if mesh is not None else _FLEET_MESH.get()
 
 
+def mesh_signature(mesh: Optional[Mesh]):
+    """JSON-able identity of a serving mesh — [[axis, size], ...] in axis
+    order, or None for the meshless service. Recorded in snapshot manifests
+    (repro.serve.recovery) so a restore can report the layout the state was
+    SAVED under; restore itself is mesh-free (reshard-on-load device_puts
+    every leaf under whatever target mesh the caller brings)."""
+    if mesh is None:
+        return None
+    return [[str(a), int(s)]
+            for a, s in zip(mesh.axis_names, mesh.devices.shape)]
+
+
 def client_shards(mesh: Optional[Mesh], capacity: int) -> int:
     """How many client shards the slot axis actually splits into: the mesh's
     `clients` size when it divides `capacity`, else 1 (the replicate

@@ -74,6 +74,100 @@ def test_shape_mismatch_rejected(tmp_path):
         ckpt.restore(str(tmp_path), 1, bad)
 
 
+def test_restore_casts_to_manifest_dtype_both_paths(tmp_path):
+    """The manifest dtype is authoritative: a leaf file whose on-disk dtype
+    drifted (e.g. rewritten by a foreign tool at float64) restores CAST on
+    both the plain and the sharded path — the sharded path used to
+    device_put the drifted dtype uncast, silently."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    step_dir = tmp_path / "step_00000001"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    entry = next(e for e in manifest["leaves"] if e["key"] == "params/w")
+    assert entry["dtype"] == "float32"
+    drifted = np.load(step_dir / entry["file"]).astype(np.float64)
+    np.save(step_dir / entry["file"], drifted)
+
+    out = ckpt.restore(str(tmp_path), 1, t)
+    assert out["params"]["w"].dtype == jnp.float32
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b"))
+    sh = jax.tree.map(lambda x: NamedSharding(mesh, P()), t)
+    out_sh = ckpt.restore(str(tmp_path), 1, t, shardings=sh)
+    assert out_sh["params"]["w"].dtype == jnp.float32
+    _assert_tree_equal(out, out_sh)
+
+
+def test_discovery_survives_junk_step_names(tmp_path):
+    """`latest_step` / `valid_steps` / manager GC must shrug off junk in
+    the checkpoint directory: non-integer `step_*` names, foreign files,
+    and `.tmp` leftovers (a stray `step_backup` used to ValueError)."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    ckpt.save(str(tmp_path), 7, t)
+    os.makedirs(tmp_path / "step_backup")
+    os.makedirs(tmp_path / "step_12abc")
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    (tmp_path / "notes.txt").write_text("x")
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    assert ckpt.valid_steps(str(tmp_path)) == [7, 3]
+    m = ckpt.CheckpointManager(str(tmp_path), keep=1)
+    m._gc()  # must not raise, must not touch the junk
+    assert ckpt.valid_steps(str(tmp_path)) == [7]
+    assert (tmp_path / "step_backup").is_dir()
+    _assert_tree_equal(t, m.restore(_tree()))
+
+
+def test_manager_async_error_surfaces_on_wait(tmp_path):
+    """A failure inside the background save thread must surface as an
+    exception on the NEXT wait()/latest() — and clear, so the manager is
+    usable afterwards."""
+    m = ckpt.CheckpointManager(str(tmp_path), keep=2)
+    # extras that cannot be JSON-serialized make save() raise in the worker
+    m.save_async(1, _tree(), extras={"bad": object()})
+    with pytest.raises(TypeError):
+        m.wait()
+    m.wait()  # error was consumed, not sticky
+    m.save_async(2, _tree(2))
+    assert m.latest() == 2
+    _assert_tree_equal(_tree(2), m.restore(_tree()))
+
+
+def test_gc_never_deletes_step_under_concurrent_restore(tmp_path,
+                                                        monkeypatch):
+    """keep=1 GC racing a restore of an older step: the reader's step is
+    protected until the read finishes, then collectable."""
+    import threading
+
+    t = _tree()
+    m = ckpt.CheckpointManager(str(tmp_path), keep=1)
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 2, _tree(2))
+
+    in_read, resume = threading.Event(), threading.Event()
+    real_restore = ckpt.restore
+
+    def slow_restore(directory, step, like, shardings=None):
+        in_read.set()
+        assert resume.wait(timeout=30)
+        return real_restore(directory, step, like, shardings)
+
+    monkeypatch.setattr(ckpt, "restore", slow_restore)
+    result = {}
+    reader = threading.Thread(
+        target=lambda: result.update(out=m.restore(_tree(), step=1)))
+    reader.start()
+    assert in_read.wait(timeout=30)
+    m._gc()  # would delete step 1 (keep=1) — but a reader holds it
+    assert (tmp_path / "step_00000001" / "manifest.json").exists()
+    resume.set()
+    reader.join(timeout=30)
+    _assert_tree_equal(t, result["out"])
+    m._gc()  # reader gone: now it is collectable
+    assert not (tmp_path / "step_00000001").exists()
+    assert (tmp_path / "step_00000002").exists()
+
+
 def test_elastic_reshard_on_load(tmp_path):
     """Save from one 'mesh', restore with shardings for another (the elastic
     scaling path). Uses the single real device but exercises the API."""

@@ -479,3 +479,133 @@ def test_bandwidth_tiers_shape_the_stream(small_tree):
     # tier names resolve through BANDWIDTH_TIERS at admission too
     cid = service.admit(cams[0], bandwidth="phone")
     assert service.client_bandwidth(cid)[0] == svc.BANDWIDTH_TIERS["phone"]
+
+
+# -- page checksums + NACK retransmit ----------------------------------------
+
+
+def test_page_checksums_and_row_page_wellformed(small_tree):
+    """The wire-framing checksum layer on a genuinely paged stream:
+    `row_page` maps every shipped wire row to a valid priority page with
+    per-page populations bounded by page_size, and `page_checksums` is an
+    order-independent per-page digest that a receiver can re-derive from
+    the rows it parsed — and that flips when a row is dropped or migrates
+    between pages."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [46.0, 41.0, 2.5]], np.float32)
+    service = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                             delta_budget=128, page_size=32)
+    service.sync(cams)
+    batch = service.last_delta
+    row_page = np.asarray(batch.row_page)
+    gids = np.asarray(batch.union_gids)
+    n_shipped = int(np.asarray(batch.n_shipped))
+    n_pages = int(np.asarray(batch.pages))
+    assert n_pages > 1  # the budget actually paged the stream
+
+    # well-formedness: shipped rows carry a real page id, padding carries -1
+    shipped = row_page >= 0
+    assert int(shipped.sum()) == n_shipped
+    assert (gids[shipped] >= 0).all()
+    assert row_page[shipped].max() == n_pages - 1
+    counts = np.bincount(row_page[shipped], minlength=n_pages)
+    assert (counts > 0).all() and (counts <= service.page_size).all()
+    # per-client page pulls can never exceed the stream's page count
+    assert (np.asarray(batch.client_pages) <= n_pages).all()
+
+    # receiver-side recompute, in shuffled order: bitwise the header values
+    want = service.delta_checksums()
+    assert want.shape == (n_pages,) and want.dtype == np.uint32
+    rng = np.random.default_rng(0)
+    got = np.zeros_like(want)
+    for i in rng.permutation(np.flatnonzero(shipped)):
+        with np.errstate(over="ignore"):
+            got[row_page[i]] += (np.uint32(gids[i]) * dp._CKSUM_MIX
+                                 + np.uint32(1))
+    np.testing.assert_array_equal(got, want)
+
+    # a dropped row flips exactly its page's checksum...
+    import dataclasses as _dc
+    drop = int(np.flatnonzero(shipped)[0])
+    mangled = row_page.copy()
+    mangled[drop] = -1
+    broken = _dc.replace(batch, row_page=jnp.asarray(mangled))
+    diff = dp.page_checksums(broken) != want
+    assert diff[row_page[drop]] and diff.sum() == 1
+    # ...and a row migrating between pages flips both (same gid total)
+    src, dst = int(row_page[drop]), (int(row_page[drop]) + 1) % n_pages
+    moved = row_page.copy()
+    moved[drop] = dst
+    diff2 = dp.page_checksums(
+        _dc.replace(batch, row_page=jnp.asarray(moved))) != want
+    assert diff2[src] and diff2[dst] and diff2.sum() == 2
+
+
+def test_lost_row_mask_is_clients_refs_in_lost_pages(small_tree):
+    """`lost_row_mask` re-queues exactly the rows the client INGESTED from
+    the named pages — never another client's rows, never rows of intact
+    pages."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [46.0, 41.0, 2.5]], np.float32)
+    service = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                             delta_budget=128, page_size=32)
+    service.sync(cams)
+    batch = service.last_delta
+    row_page = np.asarray(batch.row_page)
+    gids = np.asarray(batch.union_gids)
+    n_pages = int(np.asarray(batch.pages))
+    for slot in (0, 1):
+        ref = np.asarray(batch.ref_mask)[slot]
+        lost = [0, n_pages - 1]
+        mask = dp.lost_row_mask(batch, slot, lost)
+        rows = ref & np.isin(row_page, lost) & (gids >= 0)
+        want = np.zeros_like(mask)
+        want[gids[rows]] = True
+        np.testing.assert_array_equal(mask, want, err_msg=f"slot{slot}")
+        # a NACK for every page is exactly this sync's delivered set
+        all_mask = dp.lost_row_mask(batch, slot, range(n_pages))
+        np.testing.assert_array_equal(
+            all_mask, np.asarray(batch.delivered)[slot],
+            err_msg=f"slot{slot}:all")
+
+
+def test_nack_retransmit_converges_under_seeded_loss(small_tree):
+    """The loss loop end-to-end: every sync, each priority page of the
+    paged stream is independently lost with ~10% probability (seeded); the
+    client ingests only intact pages and NACKs the rest. The accumulated
+    store must converge BITWISE to the lossless unbudgeted oracle — page
+    loss costs retransmit syncs, never data."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [44.0, 43.0, 2.5]], np.float32)
+    base = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True)
+    base.sync(cams)
+    want = _store_scatter({}, *base.client_delta(0))
+
+    lossy = svc.LodService(small_tree, cfg, 2, focal=FOCAL, dedup=True,
+                           delta_budget=128, page_size=32)
+    rng = np.random.default_rng(23)
+    got, losses, syncs = {}, 0, 0
+    for syncs in range(1, 64 + 1):
+        lossy.sync(cams)
+        batch = lossy.last_delta
+        n_pages = int(np.asarray(batch.pages))
+        lost = [p for p in range(n_pages) if rng.random() < 0.10]
+        losses += len(lost)
+        # the client keeps only rows of pages whose checksum verified
+        ids, dec = lossy.client_delta(0)
+        keep = np.asarray(ids) >= 0
+        if lost:
+            keep &= ~np.isin(np.asarray(batch.row_page), lost)
+        kept_ids = np.where(keep, np.asarray(ids), -1)
+        got = _store_scatter(got, kept_ids, dec)
+        if lost:
+            assert lossy.nack(0, lost) >= 0  # re-queue as pending debt
+        if not np.asarray(lossy.state.pending).any() and not lost:
+            break
+    assert losses > 0, "seed never dropped a page — test is vacuous"
+    assert not np.asarray(lossy.state.pending).any()
+    for f in want:
+        assert got[f].keys() == want[f].keys(), f
+        for g in want[f]:
+            np.testing.assert_array_equal(got[f][g], want[f][g],
+                                          err_msg=f"{f}/gid{g}")

@@ -1,0 +1,673 @@
+"""Elastic fault-tolerant serving (repro.serve.recovery): snapshot/restore,
+sync-journal crash recovery, and restore-onto-a-new-mesh.
+
+The load-bearing claims pinned here:
+
+  * KILL/RESTORE CONFORMANCE — a service snapshotted mid-churn, killed, and
+    restored replays the rest of its schedule BITWISE against the
+    uninterrupted service (per-sync records including the shared-payload
+    byte split, every `ServiceState` leaf, and the host control-plane
+    mirrors), across the vmapped, pooled-XLA, and pooled-Pallas sweeps;
+  * JOURNAL RECOVERY — a crash at ANY point of a journaled run recovers
+    from the newest intact snapshot + journal-tail replay to the exact
+    pre-crash trajectory (randomized crash indices), including the
+    closed-loop bitrate controller's one-sync-delayed feedback and
+    carried paging debt;
+  * FAULT INJECTION — every injected fault (mid-write `.tmp` leftovers,
+    truncated leaf files, corrupt manifests, torn/corrupt journals,
+    mismatched trees, disagreeing snapshot halves) ends in a clean restore
+    from an earlier consistent point or a typed `RecoveryError` — silent
+    divergence is never an outcome;
+  * MESH RESIZE — restore onto a different `clients`×`slabs` mesh (bigger,
+    smaller, none) is bitwise the single-device restore (subprocess with 8
+    forced host devices), and `resize_mesh` relocates a LIVE service
+    without perturbing its trajectory.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from test_fleet_churn import (FOCAL, TAU, _assert_records_equal, _cam,
+                              _gen_schedule, _record)
+
+from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import make_fleet_mesh
+from repro.serve import lod_service as svc
+from repro.serve import recovery as rec
+
+
+def _play(ops, service, events, log=None):
+    """Drive `ops` (a LodService or a RecoveryManager over `service`)
+    through schedule `events`, recording every live client's per-sync view
+    (the churn-conformance record format)."""
+    log = {} if log is None else log
+    for ev in events:
+        if ev[0] == "admit":
+            cid = ops.admit(ev[2])
+            assert cid == ev[1]
+            log.setdefault(cid, [])
+        elif ev[0] == "evict":
+            ops.evict(ev[1])
+        else:
+            stats = ops.sync(dict(ev[1]))
+            for cid in service.active_ids:
+                log.setdefault(cid, []).append(
+                    _record(service, stats, cid, payload=service.dedup))
+    return log
+
+
+def _assert_logs_equal(a, b, ctx):
+    assert a.keys() == b.keys(), (ctx, sorted(a), sorted(b))
+    for cid in a:
+        assert len(a[cid]) == len(b[cid]), (ctx, cid)
+        for k, (x, y) in enumerate(zip(a[cid], b[cid])):
+            _assert_records_equal(x, y, f"{ctx}/cid{cid}/sync{k}")
+
+
+def _assert_services_bitwise(got, want, ctx=""):
+    """Every ServiceState leaf and every host control-plane mirror agrees
+    bitwise — the strongest form of `got` == `want`."""
+    for i, (x, y) in enumerate(zip(jax.tree_util.tree_leaves(got.state),
+                                   jax.tree_util.tree_leaves(want.state))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{ctx}:state leaf {i}")
+    for f in ("_active", "_client_ids", "_slot_cams", "_delta_ids",
+              "_bw_target", "_allowance", "_tau_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+            err_msg=f"{ctx}:{f}")
+    assert got._next_id == want._next_id, ctx
+    assert (got.taus is None) == (want.taus is None), ctx
+    if got.taus is not None:
+        np.testing.assert_array_equal(got.taus, want.taus, err_msg=ctx)
+
+
+# ---------------------------------------------------------------------------
+# (a) save -> kill -> restore replays bitwise, on all three sweep paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,impl", [("pooled", "xla"), ("vmapped", "xla"),
+                                       ("pooled", "pallas")])
+def test_kill_restore_bitwise_across_paths(tiny_tree, tmp_path, mode, impl):
+    """One randomized churn schedule; the victim is snapshotted halfway,
+    dropped, and restored from disk. The restored service must finish the
+    schedule with per-sync records (cuts, decoded-Δ accounting, bytes) and
+    final state bitwise identical to the never-interrupted oracle."""
+    rng = np.random.default_rng(31)
+    schedule = _gen_schedule(rng, steps=6, start_clients=2, max_clients=4)
+    cut = len(schedule) // 2
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+
+    def mk():
+        return svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4,
+                              mode=mode, sweep_impl=impl)
+
+    oracle = mk()
+    _play(oracle, oracle, schedule[:cut])
+    victim = mk()
+    _play(victim, victim, schedule[:cut])
+    victim.snapshot(str(tmp_path))
+    del victim  # the "kill": nothing in-memory survives
+
+    restored = svc.LodService.restore(tiny_tree, str(tmp_path))
+    _assert_services_bitwise(restored, oracle, f"{mode}/{impl}:post-restore")
+    log_r = _play(restored, restored, schedule[cut:])
+    log_o = _play(oracle, oracle, schedule[cut:])
+    _assert_logs_equal(log_r, log_o, f"{mode}/{impl}")
+    _assert_services_bitwise(restored, oracle, f"{mode}/{impl}:final")
+
+
+def test_restore_preserves_debt_and_rate_controller(small_tree, tmp_path):
+    """The hard state: a tight delta budget leaves carried paging debt, and
+    a bandwidth-controlled client's loop feeds on the PREVIOUS sync's
+    measured bytes. Snapshot mid-debt, restore, and drain — every post-
+    restore sync (byte split included) must match the uninterrupted run."""
+    cfg = svc.SessionConfig(tau=TAU, cut_budget=8192)
+    cams = np.asarray([[40.0, 40.0, 2.0], [46.0, 41.0, 2.5],
+                       [38.0, 47.0, 3.0]], np.float32)
+
+    def mk():
+        return svc.LodService(small_tree, cfg, 3, focal=FOCAL, dedup=True,
+                              delta_budget=128, page_size=64)
+
+    oracle, victim = mk(), mk()
+    for s in (oracle, victim):
+        s.set_bandwidth(0, 6000.0)  # close the loop on client 0
+        s.sync(cams)
+    assert np.asarray(victim.state.pending).any()  # debt is being carried
+    victim.snapshot(str(tmp_path))
+    del victim
+
+    restored = svc.LodService.restore(small_tree, str(tmp_path))
+    assert np.asarray(restored.state.pending).any()
+    assert restored.client_bandwidth(0)[0] == 6000.0
+    for k in range(32):
+        st_r, st_o = restored.sync(cams), oracle.sync(cams)
+        for cid in (0, 1, 2):
+            _assert_records_equal(
+                _record(restored, st_r, cid, payload=True),
+                _record(oracle, st_o, cid, payload=True),
+                f"drain/sync{k}/cid{cid}")
+        if not np.asarray(oracle.state.pending).any():
+            break
+    assert not np.asarray(restored.state.pending).any()
+    _assert_services_bitwise(restored, oracle, "drained")
+
+
+def test_restored_payload_tenancy_refuses_stale_reads(tiny_tree, tmp_path):
+    """The Δ payload is a per-sync artifact and is NOT serialized: decode
+    and NACK against a restored service must fail typed until its first
+    sync, then work normally."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    s = svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4)
+    cams = np.stack([_cam(np.random.default_rng(3)) for _ in range(2)])
+    s.sync(cams)
+    s.client_delta(0)  # live payload decodes fine
+    s.snapshot(str(tmp_path))
+    r = svc.LodService.restore(tiny_tree, str(tmp_path))
+    with pytest.raises(ValueError, match="no sync performed yet"):
+        r.client_delta(0)
+    with pytest.raises(ValueError, match="no sync performed yet"):
+        r.resolve_nack(0, [0])
+    r.sync(cams)
+    ids, _ = r.client_delta(0)
+    assert np.asarray(ids).shape[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# (b) journaled runs recover from randomized crash points
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,crash_at", [(3, 1), (11, 4), (19, 7)])
+def test_journal_recover_randomized_crash(tiny_tree, tmp_path, seed,
+                                          crash_at):
+    """Drive a journaled service, kill it at an arbitrary event index, and
+    `recover`: the snapshot + journal-tail replay must land bitwise on the
+    uninterrupted oracle's trajectory, and the rest of the schedule must
+    replay bitwise through the resumed manager."""
+    rng = np.random.default_rng(seed)
+    schedule = _gen_schedule(rng, steps=6, start_clients=1, max_clients=4)
+    crash_at = min(crash_at, len(schedule) - 1)
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+
+    def mk():
+        return svc.LodService(tiny_tree, cfg, 1, focal=FOCAL, capacity=4,
+                              mode="pooled")
+
+    oracle = mk()
+    _play(oracle, oracle, schedule[:crash_at])
+
+    victim = mk()
+    mgr = rec.RecoveryManager(victim, str(tmp_path), every=2, keep=2)
+    _play(mgr, victim, schedule[:crash_at])
+    del victim, mgr  # crash
+
+    mgr2, replayed = rec.recover(tiny_tree, str(tmp_path))
+    assert 0 <= replayed <= len(schedule)
+    _assert_services_bitwise(mgr2.service, oracle, "post-recover")
+    log_r = _play(mgr2, mgr2.service, schedule[crash_at:])
+    log_o = _play(oracle, oracle, schedule[crash_at:])
+    _assert_logs_equal(log_r, log_o, "post-recover")
+    _assert_services_bitwise(mgr2.service, oracle, "final")
+
+
+def test_journal_replays_nack_and_bandwidth(tiny_tree, tmp_path):
+    """NACKs journal their RESOLVED gids (never page numbers of a payload
+    that died with the process) and bandwidth re-tiers replay — a crash
+    right after both still recovers the exact pending debt and controller
+    seed."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    cams = np.asarray([[12.0, 9.0, 2.0], [20.0, 18.0, 3.0]], np.float32)
+
+    def mk():
+        return svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4,
+                              mode="pooled", dedup=True)
+
+    oracle, victim = mk(), mk()
+    mgr = rec.RecoveryManager(victim, str(tmp_path), every=100, keep=2)
+    oracle.sync(cams)
+    mgr.sync(cams)
+    assert int(np.asarray(victim.last_delta.pages)) >= 1
+    # client 0 loses page 0; both fleets re-queue the same rows
+    n_o = oracle.nack(0, [0])
+    n_v = mgr.nack(0, [0])
+    assert n_o == n_v > 0
+    oracle.set_bandwidth(1, 4000.0)
+    mgr.set_bandwidth(1, 4000.0)
+    del victim, mgr  # crash: only the base snapshot + journal survive
+
+    mgr2, replayed = rec.recover(tiny_tree, str(tmp_path))
+    assert replayed == 3  # sync + nack + bandwidth, all journal-replayed
+    _assert_services_bitwise(mgr2.service, oracle, "nack-replay")
+    # the re-queued debt drains identically
+    st_r, st_o = mgr2.sync(cams), oracle.sync(cams)
+    for cid in (0, 1):
+        _assert_records_equal(_record(mgr2.service, st_r, cid, True),
+                              _record(oracle, st_o, cid, True),
+                              f"post-nack/cid{cid}")
+
+
+def test_manager_denied_admit_never_journaled(tiny_tree, tmp_path):
+    """Admission control is pre-checked BEFORE journaling: a denied admit
+    leaves no record (replay would re-raise mid-recovery otherwise)."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    s = svc.LodService(tiny_tree, cfg, 1, focal=FOCAL, capacity=4,
+                       max_clients=1)
+    mgr = rec.RecoveryManager(s, str(tmp_path), every=8)
+    assert mgr.admit(required=False) is None
+    with pytest.raises(svc.AdmissionDenied):
+        mgr.admit(cam=_cam(np.random.default_rng(0)))
+    records = rec.SyncJournal.read(os.path.join(str(tmp_path),
+                                                rec.JOURNAL_NAME))
+    assert [r["kind"] for r in records] == []
+    mgr2, replayed = rec.recover(tiny_tree, str(tmp_path))
+    assert replayed == 0
+    assert mgr2.service.active_ids == [0]
+
+
+def test_snapshot_every_k_bounds_replay_and_gc_bounds_disk(tiny_tree,
+                                                           tmp_path):
+    """every=K caps the journal tail a recovery replays at K syncs, and
+    keep-last-k GC caps the snapshot count on disk."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    s = svc.LodService(tiny_tree, cfg, 1, focal=FOCAL, capacity=4)
+    mgr = rec.RecoveryManager(s, str(tmp_path), every=2, keep=2)
+    cam = _cam(np.random.default_rng(1))
+    for _ in range(7):
+        mgr.sync({0: cam})
+    steps = ckpt.valid_steps(mgr.snapshot_dir)
+    assert len(steps) == 2  # keep-last-2, GC'd
+    del s, mgr
+    mgr2, replayed = rec.recover(tiny_tree, str(tmp_path), every=2, keep=2)
+    assert replayed <= 2  # at most one snapshot interval of tail
+
+
+# ---------------------------------------------------------------------------
+# (c) fault injection: clean restore from an earlier point, or typed error
+# ---------------------------------------------------------------------------
+
+
+def _journaled_run(tree, directory, steps=5):
+    """A journaled single-client run with >= 2 surviving snapshots.
+    Returns (oracle service, camera) — the oracle ran the identical
+    schedule uninterrupted."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    cam = _cam(np.random.default_rng(5))
+
+    def mk():
+        return svc.LodService(tree, cfg, 1, focal=FOCAL, capacity=4)
+
+    oracle = mk()
+    s = mk()
+    mgr = rec.RecoveryManager(s, directory, every=2, keep=3)
+    for k in range(steps):
+        pos = (cam + k).astype(np.float32)
+        oracle.sync({0: pos})
+        mgr.sync({0: pos})
+    assert len(ckpt.valid_steps(mgr.snapshot_dir)) >= 2
+    return oracle, cam
+
+
+def test_fault_tmp_leftover_swept(tiny_tree, tmp_path):
+    """A save killed mid-write leaves a `step_*.tmp` dir: recovery sweeps
+    it and restores from the real snapshots, bitwise."""
+    oracle, _ = _journaled_run(tiny_tree, str(tmp_path))
+    snap = os.path.join(str(tmp_path), rec.SNAPSHOT_DIRNAME)
+    torn = os.path.join(snap, "step_00000099.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "leaf_00000.npy"), "wb") as f:
+        f.write(b"\x93NUMPY garbage")
+    mgr, _ = rec.recover(tiny_tree, str(tmp_path))
+    assert not os.path.exists(torn)
+    _assert_services_bitwise(mgr.service, oracle, "tmp-leftover")
+
+
+def test_fault_truncated_leaf_falls_back_a_step(tiny_tree, tmp_path):
+    """A truncated leaf file in the NEWEST snapshot: recovery falls back to
+    the previous snapshot and replays a longer journal tail — same bitwise
+    endpoint, nothing lost but replay time."""
+    oracle, _ = _journaled_run(tiny_tree, str(tmp_path))
+    snap = os.path.join(str(tmp_path), rec.SNAPSHOT_DIRNAME)
+    newest = ckpt.valid_steps(snap)[0]
+    step_dir = os.path.join(snap, f"step_{newest:08d}")
+    leaf = sorted(n for n in os.listdir(step_dir) if n.endswith(".npy"))[0]
+    path = os.path.join(step_dir, leaf)
+    with open(path, "rb") as f:
+        raw = f.read()
+    with open(path, "wb") as f:
+        f.write(raw[: max(1, len(raw) // 2)])
+    mgr, replayed = rec.recover(tiny_tree, str(tmp_path))
+    assert replayed >= 1  # the longer tail was actually replayed
+    _assert_services_bitwise(mgr.service, oracle, "truncated-leaf")
+
+
+def test_fault_corrupt_manifest_falls_back_a_step(tiny_tree, tmp_path):
+    oracle, _ = _journaled_run(tiny_tree, str(tmp_path))
+    snap = os.path.join(str(tmp_path), rec.SNAPSHOT_DIRNAME)
+    newest = ckpt.valid_steps(snap)[0]
+    with open(os.path.join(snap, f"step_{newest:08d}", "manifest.json"),
+              "w") as f:
+        f.write("{not json")
+    mgr, _ = rec.recover(tiny_tree, str(tmp_path))
+    _assert_services_bitwise(mgr.service, oracle, "corrupt-manifest")
+
+
+def test_fault_every_snapshot_corrupt_is_typed(tiny_tree, tmp_path):
+    """When NO snapshot survives, recovery raises `RecoveryError` carrying
+    every per-step failure — never a silently diverged fleet."""
+    _journaled_run(tiny_tree, str(tmp_path))
+    snap = os.path.join(str(tmp_path), rec.SNAPSHOT_DIRNAME)
+    for step in ckpt.valid_steps(snap):
+        with open(os.path.join(snap, f"step_{step:08d}", "manifest.json"),
+                  "w") as f:
+            f.write("{not json")
+    with pytest.raises(rec.RecoveryError, match="cannot recover"):
+        rec.recover(tiny_tree, str(tmp_path))
+
+
+def test_fault_journal_torn_tail_truncated(tiny_tree, tmp_path):
+    """A partial final append (the write the crash interrupted) is a torn
+    tail: truncated away, recovery proceeds from the valid prefix."""
+    oracle, _ = _journaled_run(tiny_tree, str(tmp_path))
+    jpath = os.path.join(str(tmp_path), rec.JOURNAL_NAME)
+    n_before = len(rec.SyncJournal.read(jpath, repair=False))
+    with open(jpath, "ab") as f:
+        f.write(b'{"kind": "sync", "cams"')  # no newline, no CRC
+    mgr, _ = rec.recover(tiny_tree, str(tmp_path))
+    assert len(rec.SyncJournal.read(jpath, repair=False)) == n_before
+    _assert_services_bitwise(mgr.service, oracle, "torn-journal")
+
+
+def test_fault_journal_midfile_corruption_is_typed(tiny_tree, tmp_path):
+    """A corrupt record FOLLOWED by valid ones is a hole — replaying around
+    it would silently diverge, so it must raise."""
+    _journaled_run(tiny_tree, str(tmp_path))
+    jpath = os.path.join(str(tmp_path), rec.JOURNAL_NAME)
+    with open(jpath, "r", encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    assert len(lines) >= 3
+    lines[1] = lines[1][:-8] + 'X' * 8  # smash the CRC field
+    with open(jpath, "w", encoding="utf-8") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(rec.RecoveryError, match="hole, not a torn tail"):
+        rec.recover(tiny_tree, str(tmp_path))
+
+
+def test_fault_journal_seq_hole_is_typed(tiny_tree, tmp_path):
+    _journaled_run(tiny_tree, str(tmp_path))
+    jpath = os.path.join(str(tmp_path), rec.JOURNAL_NAME)
+    with open(jpath, "r", encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    del lines[1]  # a whole record vanished
+    with open(jpath, "w", encoding="utf-8") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(rec.RecoveryError, match="records are missing"):
+        rec.recover(tiny_tree, str(tmp_path))
+
+
+def test_fault_wrong_tree_is_typed(tiny_tree, small_tree, tmp_path):
+    """Restoring fleet state against a different city tree would reindex
+    every gid — the fingerprint turns it into a typed error."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    s = svc.LodService(tiny_tree, cfg, 1, focal=FOCAL, capacity=4)
+    s.sync({0: _cam(np.random.default_rng(2))})
+    s.snapshot(str(tmp_path))
+    with pytest.raises(rec.RecoveryError, match="different tree"):
+        svc.LodService.restore(small_tree, str(tmp_path))
+
+
+def test_fault_disagreeing_snapshot_halves_is_typed(tiny_tree, tmp_path):
+    """The restored device FleetState is cross-checked against the
+    snapshotted host mirror: rewrite the host `active` leaf so the halves
+    disagree — restore must refuse."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    s = svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4)
+    s.sync(np.stack([_cam(np.random.default_rng(4)) for _ in range(2)]))
+    s.snapshot(str(tmp_path))
+    step_dir = os.path.join(str(tmp_path), "step_00000000")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    entry = next(e for e in manifest["leaves"] if e["key"] == "host/active")
+    flipped = ~np.load(os.path.join(step_dir, entry["file"]))
+    np.save(os.path.join(step_dir, entry["file"]), flipped)
+    with pytest.raises(rec.RecoveryError, match="disagrees"):
+        svc.LodService.restore(tiny_tree, str(tmp_path))
+
+
+def test_restore_empty_directory_is_typed(tiny_tree, tmp_path):
+    with pytest.raises(rec.RecoveryError, match="no complete snapshot"):
+        svc.LodService.restore(tiny_tree, str(tmp_path))
+    with pytest.raises(rec.RecoveryError, match="cannot recover"):
+        rec.recover(tiny_tree, str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# (d) the journal file format itself
+# ---------------------------------------------------------------------------
+
+
+def test_sync_journal_roundtrip_and_repair(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    j = rec.SyncJournal(path)
+    for k in range(5):
+        assert j.append({"kind": "sync", "cams": {"0": [1.0, 2.0, k]}}) == k
+    recs = rec.SyncJournal.read(path)
+    assert [r["seq"] for r in recs] == list(range(5))
+    assert recs[3]["cams"]["0"] == [1.0, 2.0, 3]
+    # torn tail: garbage after the last valid record is truncated on read
+    with open(path, "ab") as f:
+        f.write(b'{"kind": "syn\xff\xfe')
+    assert len(rec.SyncJournal.read(path, repair=True)) == 5
+    with open(path, "rb") as f:
+        raw = f.read()
+    assert raw.endswith(b"\n") and b"\xff" not in raw
+    # resuming appends continue the dense seq
+    j2 = rec.SyncJournal(path, seq=5)
+    j2.append({"kind": "shrink"})
+    assert [r["seq"] for r in rec.SyncJournal.read(path)] == list(range(6))
+
+
+def test_sync_journal_cam_roundtrip_is_bitwise(tmp_path):
+    """float32 cameras survive JSON exactly (float32 -> float64 -> float32
+    is exact), so a journal replay syncs the identical positions."""
+    cam = _cam(np.random.default_rng(9))
+    back = np.asarray(rec._jsonable_cam(cam), np.float32)
+    np.testing.assert_array_equal(cam, back)
+    j = rec.SyncJournal(str(tmp_path / "j.jsonl"))
+    j.append({"kind": "sync",
+              "cams": {"0": rec._jsonable_cam(cam)}})
+    recs = rec.SyncJournal.read(j.path)
+    got = np.asarray(recs[0]["cams"]["0"], np.float32)
+    np.testing.assert_array_equal(cam, got)
+
+
+def test_replay_unknown_kind_is_typed(tiny_tree):
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    s = svc.LodService(tiny_tree, cfg, 1, focal=FOCAL, capacity=4)
+    with pytest.raises(rec.RecoveryError, match="unknown journal record"):
+        rec.replay(s, [{"kind": "frobnicate", "seq": 0}])
+
+
+# ---------------------------------------------------------------------------
+# (e) mesh resize: live and across restore
+# ---------------------------------------------------------------------------
+
+
+def test_resize_mesh_live_is_bitwise(tiny_tree):
+    """Moving a LIVE single-device service onto a (1x1) fleet mesh and back
+    to no mesh must not perturb its trajectory."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    cams = np.stack([_cam(np.random.default_rng(6)) for _ in range(2)])
+    control = svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4)
+    moved = svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4)
+    control.sync(cams)
+    moved.sync(cams)
+    moved.resize_mesh(make_fleet_mesh(1, 1))
+    st_c, st_m = control.sync(cams), moved.sync(cams)
+    for cid in (0, 1):
+        _assert_records_equal(_record(moved, st_m, cid, True),
+                              _record(control, st_c, cid, True),
+                              f"onto-mesh/cid{cid}")
+    moved.resize_mesh(None)
+    st_c, st_m = control.sync(cams), moved.sync(cams)
+    for cid in (0, 1):
+        _assert_records_equal(_record(moved, st_m, cid, True),
+                              _record(control, st_c, cid, True),
+                              f"off-mesh/cid{cid}")
+    _assert_services_bitwise(moved, control, "after-resizes")
+
+
+def test_restore_onto_mesh_single_device_is_bitwise(tiny_tree, tmp_path):
+    """Reshard-on-load with a (1x1) target mesh: bitwise the meshless
+    restore, and the snapshot manifest records the SAVED layout."""
+    cfg = svc.SessionConfig(tau=24.0, cut_budget=2048)
+    cams = np.stack([_cam(np.random.default_rng(8)) for _ in range(2)])
+    s = svc.LodService(tiny_tree, cfg, 2, focal=FOCAL, capacity=4)
+    s.sync(cams)
+    s.snapshot(str(tmp_path))
+    assert ckpt.read_extras(str(tmp_path), 0)["mesh"] is None
+
+    plain = svc.LodService.restore(tiny_tree, str(tmp_path))
+    meshed = svc.LodService.restore(tiny_tree, str(tmp_path),
+                                    mesh=make_fleet_mesh(1, 1))
+    assert meshed.mesh is not None
+    st_p, st_m = plain.sync(cams), meshed.sync(cams)
+    for cid in (0, 1):
+        _assert_records_equal(_record(meshed, st_m, cid, True),
+                              _record(plain, st_p, cid, True),
+                              f"restore-mesh/cid{cid}")
+
+
+# ---------------------------------------------------------------------------
+# (f) the 8-device resize-restore subprocess (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys, tempfile
+sys.path.insert(0, "src")
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.gaussians import random_gaussians
+from repro.core.lod_tree import build_lod_tree
+from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import make_fleet_mesh
+from repro.serve import lod_service as svc
+from repro.serve import recovery as rec
+
+assert len(jax.devices()) == 8
+STATS = ("cut_size", "delta_size", "sync_bytes", "unique_delta",
+         "nodes_touched", "resweeps", "client_resident", "delta_shipped",
+         "delta_deferred", "pages")
+
+rng = np.random.default_rng(11)
+tree = build_lod_tree(random_gaussians(rng, 150, sh_degree=1, extent=30.0),
+                      branching=(2, 4), target_subtrees=8, seed=1)
+cfg = svc.SessionConfig(tau=32.0, cut_budget=2048)
+mesh_save = make_fleet_mesh(clients=4, slabs=2)
+
+# a churned meshed fleet: 4 seats, one admit, one evict, a few syncs
+s = svc.LodService(tree, cfg, 4, focal=1400.0, capacity=8, mode="pooled",
+                   dedup=True, mesh=mesh_save)
+pos = rng.uniform([2, 2, 1], [28, 28, 6], (4, 3)).astype(np.float32)
+s.sync(pos)
+cid = s.admit(np.asarray([14.0, 14.0, 3.0], np.float32))
+s.evict(1)
+cams = {c: (rng.uniform([2, 2, 1], [28, 28, 6]).astype(np.float32))
+        for c in s.active_ids}
+s.sync(dict(cams))
+snap = tempfile.mkdtemp()
+s.snapshot(snap)
+sig = dict((a, int(n)) for a, n in ckpt.read_extras(snap, 0)["mesh"])
+assert sig == {"clients": 4, "slabs": 2}, sig
+
+# the expected trajectory: two more syncs of the UNINTERRUPTED service
+def roll(service, steps=2):
+    r2 = np.random.default_rng(77)
+    out = []
+    for _ in range(steps):
+        c = {c: r2.uniform([2, 2, 1], [28, 28, 6]).astype(np.float32)
+             for c in service.active_ids}
+        st = service.sync(dict(c))
+        out.append({f: np.asarray(getattr(st, f)).copy() for f in STATS})
+    out.append({"cut_gids": np.asarray(service.state.cut_gids).copy(),
+                "client_has": np.asarray(
+                    service.state.mgr.client_has).copy()})
+    return out
+
+want = roll(s)
+
+# restore the SAME snapshot onto: a rebalanced 8-device mesh, a BIGGER
+# clients axis, a SMALLER 2-device mesh, and no mesh at all
+targets = {
+    "rebalanced_2x4": make_fleet_mesh(clients=2, slabs=4),
+    "bigger_8x1": make_fleet_mesh(clients=8, slabs=1),
+    "smaller_2x1": Mesh(np.array(jax.devices()[:2]).reshape(2, 1),
+                        ("clients", "slabs")),
+    "none": None,
+}
+results = {}
+for name, mesh in targets.items():
+    r = svc.LodService.restore(tree, snap, mesh=mesh)
+    assert sorted(r.active_ids) == sorted(s.active_ids)
+    got = roll(r)
+    for k, (a, b) in enumerate(zip(got, want)):
+        for f in a:
+            np.testing.assert_array_equal(a[f], b[f],
+                                          err_msg=f"{name}:{k}:{f}")
+    if mesh is not None and "clients" in mesh.axis_names \
+            and r.capacity % mesh.shape["clients"] == 0:
+        # the declared client-axis layout holds on slot-axis state leaves
+        for leaf in jax.tree_util.tree_leaves(r.state):
+            if getattr(leaf, "ndim", 0) >= 1 \
+                    and leaf.shape[0] == r.capacity:
+                assert leaf.sharding.spec[0] == "clients", \
+                    (name, leaf.shape, leaf.sharding.spec)
+    results[name] = True
+
+# crash recovery lands on a new mesh too: journaled run, kill, recover
+# onto the rebalanced mesh, trajectory bitwise vs the meshless recover
+work = tempfile.mkdtemp()
+v = svc.LodService.restore(tree, snap, mesh=mesh_save)
+mgr = rec.RecoveryManager(v, work, every=2, keep=2)
+r3 = np.random.default_rng(5)
+for _ in range(3):
+    mgr.sync({c: r3.uniform([2, 2, 1], [28, 28, 6]).astype(np.float32)
+              for c in v.active_ids})
+del v, mgr
+m_none, rep_a = rec.recover(tree, work, mesh=None)
+w2 = roll(m_none.service)
+m_mesh, rep_b = rec.recover(tree, work,
+                            mesh=targets["rebalanced_2x4"])
+assert rep_a == rep_b
+g2 = roll(m_mesh.service)
+for k, (a, b) in enumerate(zip(g2, w2)):
+    for f in a:
+        np.testing.assert_array_equal(a[f], b[f],
+                                      err_msg=f"recover-mesh:{k}:{f}")
+results["recover_onto_mesh"] = True
+results["ok"] = True
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_resize_restore_subprocess():
+    out = subprocess.run([sys.executable, "-c", _SUBPROC],
+                         capture_output=True, text=True, timeout=900,
+                         cwd=".")
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    results = json.loads(out.stdout.strip().splitlines()[-1])
+    assert results["ok"] and results["rebalanced_2x4"] \
+        and results["bigger_8x1"] and results["smaller_2x1"] \
+        and results["none"] and results["recover_onto_mesh"]
