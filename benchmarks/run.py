@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.bench_fleet_recovery",  # snapshot/restore + journal replay
     "benchmarks.bench_fleet_shard",  # mesh-sharded fleet (clients × slabs)
     "benchmarks.bench_delta_stream",  # paged Δ stream (pressure × tier)
+    "benchmarks.bench_mtp",          # deadline scheduler vs lockstep MTP
     "benchmarks.bench_bandwidth",    # Figs. 5/17(bw)/24
     "benchmarks.bench_stereo",       # Figs. 8/21
     "benchmarks.bench_stereo_batched",  # fleet-batched client rendering

@@ -7,7 +7,8 @@ Layout:
   repro.models    — the assigned LM-family architecture zoo.
   repro.sharding  — logical-axis sharding rules (DP/FSDP/TP/EP/SP).
   repro.train     — optimizer, train step, trainer (fault tolerant).
-  repro.serve     — prefill/decode serving engine.
+  repro.serve     — the fleet LoD service (partial-fleet sync, deadline
+                    scheduling, Δ-stream paging, recovery).
   repro.data      — synthetic data pipelines with prefetch.
   repro.checkpoint— mesh-agnostic checkpointing (elastic restore).
   repro.configs   — one config per assigned architecture (+ scene configs).

@@ -378,6 +378,31 @@ def batched_top_and_staleness(tree: LodTree, states: TemporalState,
     return top_cut, rpe, stale
 
 
+@functools.partial(jax.jit, static_argnames=())
+def predicted_stale_counts(tree: LodTree, states: TemporalState,
+                           cam_positions: jax.Array, focal, tau,
+                           active=None) -> jax.Array:
+    """(B,) int32 — how many slab subtrees each client WOULD resweep if it
+    were synced right now, without touching any state.
+
+    A pure read-only preview of the staleness predicate of
+    `batched_top_and_staleness`: the same top sweep + per-subtree staleness
+    test runs, but nothing is scattered back, so calling this between syncs
+    is side-effect free. This is the feature the deadline scheduler's
+    per-slot sync-cost model consumes (repro.serve.scheduler): predicted
+    sweep cost is affine in the stale-pair count, so the scheduler can
+    budget a tick's participation set before dispatching the real sync.
+    Inactive slots (and slots masked out by `active`) predict zero."""
+    _, _, stale = jax.vmap(
+        _top_and_staleness, in_axes=(None, 0, 0, None, 0))(
+        tree, states, jnp.asarray(cam_positions, jnp.float32), focal,
+        jnp.broadcast_to(jnp.asarray(tau, jnp.float32),
+                         (jnp.asarray(cam_positions).shape[0],)))
+    if active is not None:
+        stale = stale & active[:, None]
+    return stale.sum(axis=1).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("max_depth",))
 def sweep_slab_camera_pairs(slab_mu, slab_size, slab_parent, slab_level,
                             slab_is_leaf, slab_valid, rpe_sel, cam_sel,

@@ -1,4 +1,5 @@
 """Batched serving: the multi-client LoD cloud service (`lod_service`), the
 ragged-fleet lifecycle (`fleet`: runtime client admission/eviction on pow2
-capacity buckets), the encode-once Δcut dedup path (`delta_path`), and the
-LM prefill/decode engine (`engine`)."""
+capacity buckets), the encode-once Δcut dedup path (`delta_path`), the
+deadline-driven motion-to-photon scheduler (`scheduler`), and crash
+recovery (`recovery`)."""

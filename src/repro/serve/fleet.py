@@ -137,6 +137,19 @@ def fleet_grow(fleet: FleetState, new_capacity: int) -> FleetState:
     )
 
 
+def slots_mask(capacity: int, slots) -> np.ndarray:
+    """(capacity,) bool participation mask selecting the given slot indices
+    — the host-side constructor for the per-tick partial-sync mask of
+    `LodService.sync(participate=...)` (the deadline scheduler builds one
+    every tick from its selected subset). Out-of-range slots raise."""
+    mask = np.zeros((int(capacity),), bool)
+    idx = np.asarray(list(slots), np.int64)
+    if idx.size and (idx.min() < 0 or idx.max() >= capacity):
+        raise ValueError(f"slot indices outside [0, {capacity})")
+    mask[idx] = True
+    return mask
+
+
 def fleet_mirror(fleet: FleetState):
     """Host-numpy copy of the fleet bookkeeping: (active (C,) bool,
     client_ids (C,) int64, next_id int) — the control-plane mirror

@@ -170,6 +170,18 @@ class ServiceStats:
     #                            0 once the paged stream has converged)
     pages: jax.Array           # int32 — priority pages the client pulled
     #                            rows from this sync (page-header framing)
+    mtp_ms: jax.Array          # float32 — motion-to-photon latency this sync
+    #                            closed for the client: ms from its oldest
+    #                            unserved motion sample to this sync's
+    #                            completion. Wall-clock is a HOST concept, so
+    #                            the sync paths emit 0.0 and the deadline
+    #                            scheduler (repro.serve.scheduler) stamps the
+    #                            column on the stats it returns; 0.0 for
+    #                            slots with no motion served this sync.
+    deadline_miss: jax.Array   # bool — the served motion overran the
+    #                            client's frame deadline (stamped by the
+    #                            scheduler alongside mtp_ms; always False on
+    #                            the raw lockstep sync paths)
 
 
 def service_init(tree: LodTree, cfg: SessionConfig, n_clients: int,
@@ -315,6 +327,7 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
                  dedup: bool = False, delta_budget: Optional[int] = None,
                  priority=None, allowance=None,
                  page_size: Optional[int] = None,
+                 participate=None,
                  mesh=None) -> Tuple[ServiceState, ServiceStats,
                                      Optional[dp.DeltaBatch]]:
     """Shared tail of both sync paths: batched management-table update,
@@ -345,17 +358,39 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
     and the per-slot sync counter (it only ticks while active, so a slot's
     counter always reads "syncs since this client was admitted").
 
+    Partial-fleet syncs (`participate`, a (C,) bool slot mask): an ACTIVE
+    slot left out of the tick is handled by the exact same frozen-slot
+    machinery as an inactive one — no table update, no cut recompute, no
+    union rows, 0.0 bytes, no sync-counter tick — EXCEPT that, unlike an
+    inactive slot, it keeps what it already had: its render queue
+    (`cut_gids`), its pending page debt, and its temporal state survive the
+    tick bitwise (the frozen-inactive invariant only proves freshness
+    because inactive state IS the reset value; here the preserved value is
+    the slot's own). `participate=None` is the lockstep tick and compiles
+    the exact pre-scheduler program.
+
     Sharded fleets (`mesh`): everything per-client here stays on its client
-    shard (the table update, cut compaction, and wire accounting are
-    slot-parallel); the one cross-shard step is the Δ-union reduction, whose
-    payload replicates (repro.serve.delta_path)."""
+    shard (the table update, cut compaction, wire accounting — and the
+    participation mask — are slot-parallel); the one cross-shard step is
+    the Δ-union reduction, whose payload replicates
+    (repro.serve.delta_path)."""
     active = state.fleet.active
-    masks = masks & active[:, None]
+    if participate is None:
+        eff = active
+    else:
+        eff = active & shd.constrain_fleet(
+            jnp.asarray(participate, bool), ("clients",), mesh)
+    masks = masks & eff[:, None]
     new_mgr, plan = mgr.batched_cloud_sync(state.mgr, masks, state.sync_index,
                                            jnp.int32(cfg.w_star))
-    new_mgr = flt.freeze_inactive(new_mgr, state.mgr, active)
+    new_mgr = flt.freeze_inactive(new_mgr, state.mgr, eff)
     gids, counts = _batched_cut_gids(masks, cfg.cut_budget, mesh=mesh)
-    unicast = mgr.batched_wire_bytes(plan, bytes_per_g, active=active)
+    if participate is not None:
+        # a non-participating slot KEEPS its render queue (an inactive one's
+        # stored queue is already the fresh -1 row, so this is a no-op for
+        # it — and bitwise the lockstep value when everyone is selected)
+        gids = jnp.where(eff[:, None], gids, state.cut_gids)
+    unicast = mgr.batched_wire_bytes(plan, bytes_per_g, active=eff)
     batch = None
     zero = jnp.int32(0)
     zeros_i = jnp.zeros(counts.shape, jnp.int32)
@@ -365,12 +400,12 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
         if priority is None:
             priority = tree.node_levels()
         batch = dp.build_delta_batch(tree.gaussians, codec, plan.delta_data,
-                                     delta_budget, active=active, mesh=mesh,
+                                     delta_budget, active=eff, mesh=mesh,
                                      pending=state.pending, priority=priority,
                                      allowance=allowance, page_size=page_size)
         sync_bytes = mgr.batched_wire_bytes(plan, bytes_per_g,
                                             shared_payload=True,
-                                            active=active,
+                                            active=eff,
                                             delivered=batch.delivered,
                                             client_pages=batch.client_pages)
         saved = unicast - sync_bytes
@@ -379,20 +414,25 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
         # carry-over debt: deferred rows survive until they ship — unless
         # the shared reuse rule evicted them meanwhile (the oracle's client
         # would have dropped them too)
-        pending = batch.deferred & ~plan.evicted & active[:, None]
+        pending = batch.deferred & ~plan.evicted & eff[:, None]
+        if participate is not None:
+            # a slot that sat the tick out keeps its debt untouched (its
+            # rows were masked out of this union, so `deferred` is blank
+            # for it — wiping would silently lose its owed pages)
+            pending = jnp.where(eff[:, None], pending, state.pending)
         delta_deferred = pending.sum(axis=1).astype(jnp.int32)
         pages = batch.client_pages
     else:
         sync_bytes = unicast
         saved = jnp.zeros_like(unicast)
         delta_overflow = jnp.zeros(counts.shape, bool)
-        delta_shipped = jnp.where(active, plan.n_delta, zero)
+        delta_shipped = jnp.where(eff, plan.n_delta, zero)
         delta_deferred = zeros_i
         pages = zeros_i
         pending = state.pending
     new_state = ServiceState(
         mgr=new_mgr, temporal=temporal, cut_gids=gids,
-        sync_index=state.sync_index + active.astype(jnp.int32),
+        sync_index=state.sync_index + eff.astype(jnp.int32),
         pending=pending, fleet=state.fleet)
     stats = ServiceStats(
         cut_size=counts,
@@ -400,14 +440,16 @@ def _finish_sync(tree: LodTree, cfg: SessionConfig, state: ServiceState,
         unique_delta=dp.first_owner_counts(plan.delta_data),
         sync_bytes=sync_bytes,
         dedup_bytes_saved=saved,
-        nodes_touched=jnp.where(active, nodes_touched.astype(jnp.int32), zero),
-        resweeps=jnp.where(active, resweeps.astype(jnp.int32), zero),
+        nodes_touched=jnp.where(eff, nodes_touched.astype(jnp.int32), zero),
+        resweeps=jnp.where(eff, resweeps.astype(jnp.int32), zero),
         client_resident=plan.n_resident,
         overflow=counts > cfg.cut_budget,
-        delta_overflow=delta_overflow & active,
+        delta_overflow=delta_overflow & eff,
         delta_shipped=delta_shipped,
         delta_deferred=delta_deferred,
-        pages=jnp.where(active, pages, zero))
+        pages=jnp.where(eff, pages, zero),
+        mtp_ms=jnp.zeros(counts.shape, jnp.float32),
+        deadline_miss=jnp.zeros(counts.shape, bool))
     # pin the declared fleet layout on the outputs (no-op when meshless):
     # every ServiceState/ServiceStats leaf leads with the slot axis and
     # carries the client-shard NamedSharding the acceptance contract names
@@ -454,6 +496,17 @@ def rate_control_step(target_bytes, measured_bytes, allowance, tau_scale, *,
         comfortably under target (measured < target/tau_step) the scale
         decays back toward 1.0 — the closed loop breathes both ways.
 
+    `measured == 0` under a finite target is MAXIMAL headroom, not "no
+    signal": an idle client (nothing shipped last sync) gets the full ×2.0
+    allowance step and, if escalated, a τ relax — so one bursty sync can
+    never pin a client coarse forever once it goes quiet.
+
+    The allowance floor is `min(page_size, max_rows)`: a page wider than the
+    stream budget (degenerate but allowed at the `build_delta_batch` layer,
+    which clamps pages to the union width) must not invert the clip bounds —
+    `np.clip` with min > max silently returns max everywhere, freezing the
+    loop at a value the stream can never serve.
+
     Clients with a non-finite target (or a negative `allowance` sentinel)
     are uncontrolled and pass through untouched. Returns (allowance,
     tau_scale) as new arrays."""
@@ -462,14 +515,17 @@ def rate_control_step(target_bytes, measured_bytes, allowance, tau_scale, *,
     allowance = np.asarray(allowance, np.int64)
     tau_scale = np.asarray(tau_scale, np.float32)
     controlled = np.isfinite(target) & (allowance >= 0)
-    ratio = np.where(controlled & (measured > 0.0),
-                     target / np.maximum(measured, 1.0), 1.0)
+    ratio = np.where(controlled,
+                     np.where(measured > 0.0,
+                              target / np.maximum(measured, 1.0), np.inf),
+                     1.0)
     step = np.clip(ratio, 0.5, 2.0)
+    lo = min(int(page_size), int(max_rows))
     new_allow = np.where(
         controlled,
-        np.clip(np.floor(allowance * step), page_size, max_rows),
+        np.clip(np.floor(allowance * step), lo, max_rows),
         allowance).astype(np.int64)
-    at_floor = controlled & (new_allow <= page_size) & (ratio < 1.0)
+    at_floor = controlled & (new_allow <= lo) & (ratio < 1.0)
     new_tau = np.where(at_floor,
                        np.minimum(tau_scale * tau_step, tau_scale_max),
                        tau_scale)
@@ -511,6 +567,7 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
                          delta_budget: Optional[int] = None,
                          priority=None, allowance=None,
                          page_size: Optional[int] = None,
+                         participate=None,
                          mesh=None) -> Tuple[ServiceState, ServiceStats,
                                              Optional[dp.DeltaBatch]]:
     """One LoD sync for every client, fully on-device (vmapped search).
@@ -524,7 +581,10 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     is the price of this path), but inactive slots' temporal state is
     frozen back to its reset value afterwards, so the resulting state is
     bitwise identical to the pooled scheduler's — which never touches them
-    at all.
+    at all. `participate` (a (C,) bool slot mask; the deadline scheduler's
+    per-tick selection) freezes non-selected ACTIVE slots the same way —
+    except back to their own previous state, not the reset value (see
+    `_finish_sync`).
 
     Sharded fleets: `mesh` (explicit, or the ambient
     `repro.sharding.fleet.use_fleet_mesh`) shards the whole search on the
@@ -533,16 +593,20 @@ def service_sync_vmapped(tree: LodTree, cfg: SessionConfig,
     mesh = shd.resolve_mesh(mesh)
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
+    eff = state.fleet.active
+    if participate is not None:
+        eff = eff & shd.constrain_fleet(
+            jnp.asarray(participate, bool), ("clients",), mesh)
     cut, temporal = ls.batched_temporal_search(
         tree, state.temporal, cams, jnp.float32(focal), tau_b)
-    temporal = flt.freeze_inactive(temporal, state.temporal,
-                                   state.fleet.active)
+    temporal = flt.freeze_inactive(temporal, state.temporal, eff)
     masks = ls.batched_cut_mask(cut, tree)
     return _finish_sync(tree, cfg, state, temporal, masks,
                         cut.nodes_touched, cut.resweep.sum(axis=1),
                         bytes_per_g, codec=codec, dedup=dedup,
                         delta_budget=delta_budget, priority=priority,
-                        allowance=allowance, page_size=page_size, mesh=mesh)
+                        allowance=allowance, page_size=page_size,
+                        participate=participate, mesh=mesh)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
@@ -670,6 +734,7 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         delta_budget: Optional[int] = None,
                         priority=None, allowance=None,
                         page_size: Optional[int] = None,
+                        participate=None,
                         tables: Optional[ls.SlabTables] = None,
                         sweep_impl: str = "xla", interpret: bool = True,
                         mesh=None) -> Tuple[ServiceState, ServiceStats,
@@ -697,15 +762,24 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     slab views. `sweep_impl` = "xla" | "pallas" picks the bucket sweep
     implementation (bit-parity tested).
 
+    Partial-fleet ticks (`participate`, a (C,) bool slot mask): non-selected
+    slots are masked out of the staleness pool itself, so the pooled sweep —
+    and the pool-size scalars the host awaits — track only the SELECTED
+    subset (this is the scheduler's actual work saving, not just an output
+    mask); their temporal state, render queue, pending debt, and sync
+    counter survive the tick bitwise (see `_finish_sync`).
+
     Sharded fleets (`mesh`, explicit or ambient): the staleness pool is
     PER CLIENT SHARD — each shard compacts its own slots' stale pairs into
     its own pow2 bucket (`_compact_stale_pairs(n_shards=k)`), the host
     awaits one (k,) per-shard count vector instead of one scalar (their max
     picks the shared bucket size, their sum is the fleet pool), and the
     bucketed sweep runs shard-parallel on the clients axis while its slab
-    gathers cross the `slabs` axis. Results are bitwise the unsharded
-    service's: repeat-padding differs per shard but padded lanes rewrite
-    identical values, and an empty shard's lanes are guarded no-ops.
+    gathers cross the `slabs` axis. The participation mask is placed on the
+    `clients` axis too (`shard_participation`), so partial-tick masking
+    stays shard-local. Results are bitwise the unsharded service's:
+    repeat-padding differs per shard but padded lanes rewrite identical
+    values, and an empty shard's lanes are guarded no-ops.
 
     NOTE: like `temporal_search_hybrid`, the scatter donates the incoming
     `state.temporal` buffers (no (B, Ns, S) re-copy per sync). On backends
@@ -716,12 +790,17 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
     cams = jnp.asarray(cam_positions, jnp.float32)
     tau_b = _fleet_taus(cfg, cams.shape[0], taus)
     active = state.fleet.active
+    eff = active
+    if participate is not None:
+        eff = active & shd.shard_participation(
+            mesh, jnp.asarray(participate, bool))
     if tables is None:
         tables = ls.SlabTables.from_tree(tree, mesh=mesh)
     # inactive slots report zero staleness, so they never enter the pool:
     # sweep work (and the pool-size scalars below) tracks the ACTIVE fleet
+    # — and, on a partial tick, only its SELECTED subset
     top_cut, rpe, stale = ls.batched_top_and_staleness(
-        tree, state.temporal, cams, jnp.float32(focal), tau_b, active,
+        tree, state.temporal, cams, jnp.float32(focal), tau_b, eff,
         mesh=mesh)
     k = shd.client_shards(mesh, stale.shape[0])
     # the ONE host synchronization of the sync: pool-size scalars — global
@@ -753,14 +832,15 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
             f_cut, f_rexp, f_rho, cams[sel_b], valid, guard=k > 1,
             mesh=mesh)
 
-    # the active-masked scatter never touches an inactive slot's donated
-    # buffers; freeze the two non-donated leaves the same way so inactive
-    # slots stay bitwise at their reset value (swept=False ⇒ still cold)
+    # the eff-masked scatter never touches a non-participating slot's
+    # donated buffers; freeze the two non-donated leaves the same way so
+    # inactive slots stay bitwise at their reset value (swept=False ⇒ still
+    # cold) and sat-out slots keep their own previous temporal state
     temporal = ls.TemporalState(
         cam0=cam0, rho=rho,
-        parent_expand0=jnp.where(active[:, None], rpe, tp.parent_expand0),
+        parent_expand0=jnp.where(eff[:, None], rpe, tp.parent_expand0),
         slab_cut0=slab_cut, root_expand0=root_expand,
-        swept=jnp.where(active[:, None], True, tp.swept))
+        swept=jnp.where(eff[:, None], True, tp.swept))
     nodes_touched = m.T + stale.sum(axis=1).astype(jnp.int32) * m.S
     cut = ls.CutResult(top_cut=top_cut, slab_cut=slab_cut,
                        root_expand=root_expand, resweep=stale,
@@ -770,7 +850,8 @@ def service_sync_pooled(tree: LodTree, cfg: SessionConfig,
                         stale.sum(axis=1), bytes_per_g, codec=codec,
                         dedup=dedup, delta_budget=delta_budget,
                         priority=priority, allowance=allowance,
-                        page_size=page_size, mesh=mesh)
+                        page_size=page_size, participate=participate,
+                        mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -877,7 +958,7 @@ class LodService:
                  capacity: Optional[int] = None,
                  mesh=None, max_clients: Optional[int] = None,
                  max_state_bytes: Optional[float] = None,
-                 bandwidth=None, page_size: int = 256):
+                 bandwidth=None, page_size: Optional[int] = None):
         if mode not in ("pooled", "vmapped"):
             raise ValueError(f"unknown scheduler mode: {mode!r}")
         if sweep_impl not in ("xla", "pallas"):
@@ -933,9 +1014,23 @@ class LodService:
         self.delta_budget = (int(delta_budget) if delta_budget is not None
                              else min(tree.n_pad,
                                       cfg.cut_budget * self.capacity))
-        if page_size < 1:
-            raise ValueError(f"page_size must be >= 1, got {page_size}")
-        self.page_size = int(page_size)
+        # page_size=None → one 256-row page, clamped to the stream budget.
+        # An EXPLICIT page wider than the budget is a config error: the
+        # stream could never ship a full page per sync, and the rate
+        # controller's allowance floor would sit above its own ceiling
+        # (the np.clip(min > max) degenerate the PR 6 controller hit).
+        if page_size is None:
+            self.page_size = max(1, min(256, self.delta_budget))
+        else:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if page_size > self.delta_budget:
+                raise ValueError(
+                    f"page_size {page_size} > delta_budget "
+                    f"{self.delta_budget}: a page must fit the Δ-stream "
+                    f"budget (pass a smaller page_size or raise "
+                    f"delta_budget)")
+            self.page_size = int(page_size)
         # coarse-first priority key of the paged union stream, derived once
         self._priority = tree.node_levels()
         # closed-loop bitrate controller state (host-side, like `taus`):
@@ -945,6 +1040,12 @@ class LodService:
         self._allowance = np.full(self.capacity, -1, np.int64)
         self._tau_scale = np.ones(self.capacity, np.float32)
         self._last_stats: Optional[ServiceStats] = None
+        # which rows of _last_stats are FRESH measurements (produced by the
+        # immediately-previous sync): on a partial tick (`participate`) a
+        # sat-out slot's stats row is its older measurement, and feeding it
+        # to the multiplicative controller again would compound one
+        # observation — the controller only commits where this mask is True
+        self._stats_fresh = np.zeros(self.capacity, bool)
         if bandwidth is not None:
             if isinstance(bandwidth, (list, tuple, np.ndarray)):
                 if len(bandwidth) != n_clients:
@@ -1117,6 +1218,7 @@ class LodService:
         self._bw_target[slot] = np.inf
         self._allowance[slot] = -1
         self._tau_scale[slot] = 1.0
+        self._stats_fresh[slot] = False
 
     def _grow(self, new_capacity: int) -> None:
         """Pad every slot-axis array to `new_capacity` (host mirrors
@@ -1146,6 +1248,8 @@ class LodService:
             [self._allowance, np.full(pad, -1, np.int64)])
         self._tau_scale = np.concatenate(
             [self._tau_scale, np.ones(pad, np.float32)])
+        self._stats_fresh = np.concatenate(
+            [self._stats_fresh, np.zeros(pad, bool)])
         if self._last_stats is not None:
             # the feedback source keeps its pre-growth leading dim — pad
             # with zero rows (new slots are uncontrolled until admitted, and
@@ -1220,6 +1324,7 @@ class LodService:
         self._bw_target = self._bw_target[perm]
         self._allowance = self._allowance[perm]
         self._tau_scale = self._tau_scale[perm]
+        self._stats_fresh = self._stats_fresh[perm]
         self._rcfg_cache.clear()
         self._stack_cache.clear()
         return target
@@ -1282,7 +1387,24 @@ class LodService:
 
     # -- sync -----------------------------------------------------------------
 
-    def sync(self, cam_positions=None) -> ServiceStats:
+    def _participation_mask(self, participate) -> Optional[np.ndarray]:
+        """Normalize `sync`'s `participate` argument to a (capacity,) bool
+        slot mask (None = lockstep): a bool array of capacity length passes
+        through; anything else is an iterable of stable CLIENT IDS, each
+        resolved to its live slot (unknown ids raise, before any state is
+        touched)."""
+        if participate is None:
+            return None
+        arr = np.asarray(participate)
+        if arr.dtype == bool:
+            if arr.shape != (self.capacity,):
+                raise ValueError(f"participation mask shape {arr.shape} != "
+                                 f"({self.capacity},)")
+            return arr.copy()
+        slots = [self._slot_of(int(c)) for c in np.atleast_1d(arr)]
+        return flt.slots_mask(self.capacity, slots)
+
+    def sync(self, cam_positions=None, participate=None) -> ServiceStats:
         """One fleet sync. Returns device-resident per-SLOT stats — they
         are NOT forced here, so back-to-back `sync` calls pipeline: the host
         dispatches sync t while the device finishes the table update and
@@ -1292,16 +1414,32 @@ class LodService:
         `cam_positions` is either an (n_clients, 3) array addressing the
         live clients in slot order (`active_ids` order — the legacy form), a
         {client_id: position} dict updating a subset (others keep their last
-        known position), or None (everyone keeps their last position).
+        known position), or None (everyone keeps their last position). A
+        dict with an unknown client id raises KeyError BEFORE any position
+        is stored — a bad id never partially updates `_slot_cams`.
+
+        `participate` makes this a PARTIAL-FLEET tick (the deadline
+        scheduler's primitive, repro.serve.scheduler): a (capacity,) bool
+        slot mask or an iterable of client ids — only those slots sync;
+        everyone else's state (temporal, render queue, pending debt, sync
+        counter, controller) survives the tick bitwise untouched, and
+        returned stats rows for sat-out slots are zero. A mask selecting
+        every live slot replays bitwise against the lockstep
+        `participate=None` call (tests/test_scheduler.py).
 
         With bandwidth-controlled clients the PREVIOUS sync's stats are
         read back here to close the bitrate loop (one forced await per sync
-        — only then; an uncontrolled fleet keeps the fully-async
-        pipeline)."""
+        — only then; an uncontrolled fleet keeps the fully-async pipeline).
+        Under partial ticks the controller only commits a slot's update
+        when that slot's measurement is fresh (it participated in the
+        previous sync) — a stale measurement is never fed through the
+        multiplicative loop twice."""
+        part_mask = self._participation_mask(participate)
         if isinstance(cam_positions, dict):
-            for cid, pos in cam_positions.items():
-                self._slot_cams[self._slot_of(cid)] = np.asarray(
-                    pos, np.float32)
+            updates = {self._slot_of(cid): np.asarray(pos, np.float32)
+                       for cid, pos in cam_positions.items()}
+            for slot, pos in updates.items():
+                self._slot_cams[slot] = pos
         elif cam_positions is not None:
             cams = np.asarray(cam_positions, np.float32)
             if cams.shape != (self.n_clients, 3):
@@ -1313,10 +1451,16 @@ class LodService:
             if self._last_stats is not None:
                 measured = np.asarray(self._last_stats.sync_bytes,
                                       np.float64)
-                self._allowance, self._tau_scale = rate_control_step(
+                new_allow, new_tau = rate_control_step(
                     self._bw_target, measured, self._allowance,
                     self._tau_scale, page_size=self.page_size,
                     max_rows=self.delta_budget)
+                commit = self._stats_fresh
+                self._allowance = np.where(commit, new_allow,
+                                           self._allowance)
+                self._tau_scale = np.where(commit, new_tau,
+                                           self._tau_scale
+                                           ).astype(np.float32)
             allowance = np.where(self._allowance >= 0, self._allowance,
                                  self.delta_budget).astype(np.int32)
             base = (self.taus if self.taus is not None
@@ -1325,7 +1469,7 @@ class LodService:
         kw = dict(taus=taus_eff, codec=self.codec, dedup=self.dedup,
                   delta_budget=self.delta_budget, priority=self._priority,
                   allowance=allowance, page_size=self.page_size,
-                  mesh=self.mesh)
+                  participate=part_mask, mesh=self.mesh)
         if self.mode == "pooled":
             self.state, stats, batch = service_sync_pooled(
                 self.tree, self.cfg, self.state, self._slot_cams, self.focal,
@@ -1341,8 +1485,19 @@ class LodService:
             # (guards client_delta against churn between sync and decode)
             self._delta_ids = self._client_ids.copy()
         # feedback source for the NEXT sync's rate-control step (device-
-        # resident; only read back when a client is bandwidth-controlled)
-        self._last_stats = stats
+        # resident; only read back when a client is bandwidth-controlled).
+        # A partial tick merges: each slot keeps its latest OBSERVED
+        # measurement, and _stats_fresh marks which rows this tick renewed.
+        if part_mask is None or self._last_stats is None:
+            self._last_stats = stats
+        else:
+            pm = jnp.asarray(part_mask)
+            self._last_stats = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(
+                    pm.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                stats, self._last_stats)
+        self._stats_fresh = (self._active.copy() if part_mask is None
+                             else (self._active & part_mask))
         return stats
 
     def client_cut(self, client_id: int) -> jax.Array:

@@ -123,6 +123,7 @@ def _host_mirrors(service: LodService) -> Dict[str, np.ndarray]:
         "delta_ids": np.asarray(service._delta_ids, np.int64),
         "last_sync_bytes": last_bytes,
         "slot_cams": np.asarray(service._slot_cams, np.float32),
+        "stats_fresh": np.asarray(service._stats_fresh, bool),
         "tau_scale": np.asarray(service._tau_scale, np.float32),
         "taus": taus,
     }
@@ -138,13 +139,15 @@ def _host_like(capacity: int) -> Dict[str, np.ndarray]:
         "delta_ids": np.zeros((capacity,), np.int64),
         "last_sync_bytes": np.zeros((capacity,), np.float32),
         "slot_cams": np.zeros((capacity, 3), np.float32),
+        "stats_fresh": np.zeros((capacity,), bool),
         "tau_scale": np.zeros((capacity,), np.float32),
         "taus": np.zeros((capacity,), np.float32),
     }
 
 
 def snapshot_service(service: LodService, directory: str, step: int = 0, *,
-                     journal_seq: int = 0) -> str:
+                     journal_seq: int = 0,
+                     scheduler_state: Optional[Dict[str, Any]] = None) -> str:
     """Atomically serialize `service` as checkpoint `step_<step>` under
     `directory` (`checkpoint.manager.save`: tmp dir + fsync + rename — a
     kill mid-write leaves a `.tmp` leftover, never a half checkpoint).
@@ -156,7 +159,12 @@ def snapshot_service(service: LodService, directory: str, step: int = 0, *,
     in the manifest extras. The Δ payload itself is NOT serialized (it is a
     per-sync artifact with per-sync shapes); its tenancy vector is, so a
     restored service refuses stale decode requests instead of inventing
-    rows."""
+    rows.
+
+    `scheduler_state` (a JSON-able dict — `DeadlineScheduler.state_dict()`)
+    rides in the extras too, so a recovered service can rebuild its
+    deadline scheduler with the fitted cost model and per-client deadlines
+    it crashed with (repro.serve.scheduler)."""
     extras = {
         "format": SNAPSHOT_FORMAT,
         "capacity": int(service.capacity),
@@ -180,6 +188,8 @@ def snapshot_service(service: LodService, directory: str, step: int = 0, *,
         "tree": tree_fingerprint(service.tree),
         "mesh": shd.mesh_signature(service.mesh),
     }
+    if scheduler_state is not None:
+        extras["scheduler"] = scheduler_state
     tree = {"state": service.state, "host": _host_mirrors(service)}
     return ckpt.save(directory, int(step), tree, extras)
 
@@ -195,7 +205,8 @@ def _zero_stats(capacity: int, sync_bytes: np.ndarray) -> ServiceStats:
         sync_bytes=jnp.asarray(sync_bytes, jnp.float32),
         dedup_bytes_saved=zf, nodes_touched=zi, resweeps=zi,
         client_resident=zi, overflow=zb, delta_overflow=zb,
-        delta_shipped=zi, delta_deferred=zi, pages=zi)
+        delta_shipped=zi, delta_deferred=zi, pages=zi,
+        mtp_ms=zf, deadline_miss=zb)
 
 
 def _read_extras(directory: str, step: int) -> Dict[str, Any]:
@@ -298,6 +309,7 @@ def _restore_with_extras(tree: LodTree, directory: str,
     svc._bw_target = host["bw_target"].copy()
     svc._allowance = host["allowance"].copy()
     svc._tau_scale = host["tau_scale"].copy()
+    svc._stats_fresh = host["stats_fresh"].copy()
     svc._next_id = int(extras["next_id"])
     svc.taus = host["taus"].copy() if extras["has_taus"] else None
     svc._last_stats = (_zero_stats(capacity, host["last_sync_bytes"])
@@ -409,8 +421,13 @@ def replay(service: LodService, records) -> int:
         kind = rec.get("kind")
         if kind == "sync":
             cams = rec.get("cams")
-            service.sync(None if cams is None else {
-                int(c): np.asarray(v, np.float32) for c, v in cams.items()})
+            part = rec.get("participate")
+            service.sync(
+                None if cams is None else {
+                    int(c): np.asarray(v, np.float32)
+                    for c, v in cams.items()},
+                participate=None if part is None
+                else [int(c) for c in part])
         elif kind == "admit":
             cid = service.admit(cam=rec.get("cam"), tau=rec.get("tau"),
                                 bandwidth=rec.get("bandwidth"))
@@ -454,12 +471,16 @@ class RecoveryManager:
     sync the journal last recorded."""
 
     def __init__(self, service: LodService, directory: str, every: int = 8,
-                 keep: int = 3, *, _resume_seq: Optional[int] = None):
+                 keep: int = 3, *, scheduler=None,
+                 _resume_seq: Optional[int] = None):
         if every < 1:
             raise ValueError(f"every must be >= 1, got {every}")
         if keep < 1:
             raise ValueError(f"keep must be >= 1, got {keep}")
         self.service = service
+        # optional DeadlineScheduler whose state_dict() rides in every
+        # snapshot's extras (restored via `recover(...).scheduler_state`)
+        self.scheduler = scheduler
         self.directory = directory
         self.snapshot_dir = os.path.join(directory, SNAPSHOT_DIRNAME)
         self.every = int(every)
@@ -479,7 +500,9 @@ class RecoveryManager:
     def _snapshot(self) -> None:
         snapshot_service(self.service, self.snapshot_dir,
                          step=self.journal.seq,
-                         journal_seq=self.journal.seq)
+                         journal_seq=self.journal.seq,
+                         scheduler_state=None if self.scheduler is None
+                         else self.scheduler.state_dict())
         self._since_snapshot = 0
         self._gc()
 
@@ -496,7 +519,7 @@ class RecoveryManager:
 
     # -- journaled service API -------------------------------------------------
 
-    def sync(self, cam_positions=None) -> ServiceStats:
+    def sync(self, cam_positions=None, participate=None) -> ServiceStats:
         if isinstance(cam_positions, dict):
             cams = {str(int(c)): _jsonable_cam(v)
                     for c, v in cam_positions.items()}
@@ -506,10 +529,22 @@ class RecoveryManager:
                     for c, row in zip(self.service.active_ids, arr)}
         else:
             cams = None
-        self.journal.append({"kind": "sync", "cams": cams})
+        if participate is not None:
+            # journal STABLE CLIENT IDS, not slot indices: replay may land
+            # on a restored service whose slot layout shifted (shrink), but
+            # ids name the same clients
+            mask = self.service._participation_mask(participate)
+            ids = sorted(int(c) for c in np.asarray(
+                self.service._client_ids)[mask & self.service._active])
+            part = ids
+        else:
+            part = None
+        self.journal.append({"kind": "sync", "cams": cams,
+                             "participate": part})
         stats = self.service.sync(
             None if cams is None else
-            {int(c): np.asarray(v, np.float32) for c, v in cams.items()})
+            {int(c): np.asarray(v, np.float32) for c, v in cams.items()},
+            participate=part)
         self._since_snapshot += 1
         if self._since_snapshot >= self.every:
             self._snapshot()
@@ -602,6 +637,11 @@ def recover(tree: LodTree, directory: str, mesh=None, every: int = 8,
         replayed = replay(svc, records[base:])
         manager = RecoveryManager(svc, directory, every=every, keep=keep,
                                   _resume_seq=len(records))
+        # the snapshotted scheduler state (if any) — the caller rebuilds a
+        # DeadlineScheduler around the recovered service and
+        # load_state_dict()s this (the journal replays partial ticks, but
+        # the fitted cost model / deadlines live scheduler-side)
+        manager.scheduler_state = extras.get("scheduler")
         return manager, replayed
     detail = "; ".join(failures) if failures else "no complete snapshot"
     raise RecoveryError(f"cannot recover from {directory}: {detail}")

@@ -152,6 +152,20 @@ def constrain_fleet(x: jax.Array, logical: Tuple[Optional[str], ...],
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def shard_participation(mesh: Optional[Mesh], mask) -> jax.Array:
+    """Place a per-tick (C,) participation mask (the deadline scheduler's
+    selected-slot set, `LodService.sync(participate=...)`) on the `clients`
+    axis, like every other per-slot leaf: each client shard holds its own
+    slots' bits, so the partial-sync masking (`active & participate`) stays
+    shard-local and no mask ever crosses shards. No-op without a mesh."""
+    mask = jnp.asarray(mask, bool)
+    if mesh is None:
+        return mask
+    return jax.device_put(
+        mask, NamedSharding(mesh, fleet_pspec(mesh, ("clients",),
+                                              mask.shape)))
+
+
 def _leading_axis_shardings(mesh: Mesh, tree: Any, axis_name: str):
     def one(leaf):
         shape = tuple(getattr(leaf, "shape", ()))

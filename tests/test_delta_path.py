@@ -435,6 +435,59 @@ def test_rate_control_step_unit():
     assert allow3[2] == -1 and tau3[2] == 1.0
 
 
+def test_rate_control_idle_client_relaxes_escalation():
+    """Regression (burst-then-idle): a client that bursts to the floor and
+    escalates tau, then goes IDLE, must be released — `measured == 0` under
+    a finite target is maximal headroom, not "no signal". Pre-fix the
+    update forced ratio to 1.0 at zero measurement, so an idle client's
+    allowance froze at the floor and its escalated tau never decayed: one
+    bursty sync pinned it coarse forever."""
+    target = np.asarray([1e4])
+    allow = np.asarray([64])
+    tau = np.asarray([2.0], np.float32)
+    # the burst: 8x over target at the one-page floor -> tau escalates
+    allow, tau = svc.rate_control_step(target, [8e4], allow, tau,
+                                       page_size=64, max_rows=4096)
+    assert allow.tolist() == [64] and tau[0] == pytest.approx(2.5)
+    # first idle sync: full x2 allowance step AND a tau relax
+    allow, tau = svc.rate_control_step(target, [0.0], allow, tau,
+                                       page_size=64, max_rows=4096)
+    assert allow.tolist() == [128] and tau[0] == pytest.approx(2.0)
+    # sustained idle drains the escalation completely and re-opens the
+    # allowance to the stream budget
+    for _ in range(8):
+        allow, tau = svc.rate_control_step(target, [0.0], allow, tau,
+                                           page_size=64, max_rows=4096)
+    assert tau[0] == 1.0 and allow[0] == 4096
+
+
+def test_page_size_budget_degenerate_config(small_tree):
+    """Regression: `page_size > delta_budget` used to invert the
+    controller's `np.clip(..., page_size, max_rows)` bounds — numpy
+    silently returns the max everywhere, freezing the loop at an allowance
+    the stream can never serve. The config is now a typed error at
+    construction, the default page adapts to small budgets, and the
+    controller floor is `min(page_size, max_rows)` so the bounds can never
+    invert."""
+    cfg = SessionConfig(tau=TAU, cut_budget=8192)
+    with pytest.raises(ValueError, match="page_size"):
+        svc.LodService(small_tree, cfg, 1, focal=FOCAL, dedup=True,
+                       delta_budget=64, page_size=256)
+    with pytest.raises(ValueError, match="page_size"):
+        svc.LodService(small_tree, cfg, 1, focal=FOCAL, dedup=True,
+                       delta_budget=64, page_size=0)
+    service = svc.LodService(small_tree, cfg, 1, focal=FOCAL, dedup=True,
+                             delta_budget=64)
+    assert service.page_size == 64        # default clamps to the budget
+    # the pure update rule floors at the EFFECTIVE page (min with the
+    # budget): an overshooting client lands exactly on the serveable floor
+    # and the tau fallback still engages there
+    allow, tau = svc.rate_control_step(
+        [1e4], [4e4], [64], np.ones(1, np.float32),
+        page_size=512, max_rows=128)
+    assert allow.tolist() == [128] and tau[0] == pytest.approx(1.25)
+
+
 def test_bandwidth_tiers_shape_the_stream(small_tree):
     """Heterogeneous bandwidth on one fleet: the narrow client is paced
     (rows deferred, allowance tightened by the loop) while the uncapped
